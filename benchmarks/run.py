@@ -1,0 +1,107 @@
+"""Benchmark entry point: one row per paper table/figure + kernel
+microbenchmarks.  Prints ``name,us_per_call,derived`` CSV and writes the
+full JSON payloads to experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timed(fn, *args, reps=5, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def kernel_rows(quick=False):
+    from repro.kernels import ops
+    k = jax.random.PRNGKey(0)
+    rows = []
+    xs = [jax.random.normal(jax.random.fold_in(k, i), (512, 2048))
+          for i in range(5)]
+    us = _timed(lambda: ops.fused_prox_sgd(*xs, eta=1e-2, rho=1e-3))
+    rows.append(("kernel.fused_prox_sgd_512x2048", us,
+                 f"GB/s={7*512*2048*4/us/1e3:.1f}"))
+    x = jax.random.normal(k, (64, 2048, 64))
+    idx = jnp.sort(jax.random.permutation(k, 2048)[:1024]).astype(jnp.int32)
+    us = _timed(lambda: ops.compact_groups(x, idx))
+    rows.append(("kernel.compact_2048to1024", us,
+                 f"GB/s={2*64*1024*64*4/us/1e3:.1f}"))
+    us = _timed(lambda: ops.group_norms_sq(
+        jax.random.normal(k, (8, 512, 1024))))
+    rows.append(("kernel.group_norms_8x512x1024", us,
+                 f"GB/s={8*512*1024*4/us/1e3:.1f}"))
+    x4 = jax.random.normal(k, (2, 256, 16, 32))
+    dt = jax.nn.softplus(jax.random.normal(k, (2, 256, 16)))
+    A = -jnp.exp(jax.random.normal(k, (16,)) * 0.3)
+    Bm = jax.random.normal(k, (2, 256, 32))
+    us = _timed(lambda: ops.ssd_chunk_scan(x4, dt, A, Bm, Bm, chunk=64,
+                                           block_h=8))
+    rows.append(("kernel.ssd_scan_T256", us, "interpret-mode on CPU"))
+    return rows
+
+
+def main():
+    quick = "--quick" in sys.argv
+    os.makedirs("experiments/bench", exist_ok=True)
+    from benchmarks import paper_figs as F
+
+    rows = []
+
+    def bench(name, fn, derived_fn, **kw):
+        t0 = time.time()
+        out = fn(**kw)
+        us = (time.time() - t0) * 1e6
+        with open(f"experiments/bench/{name}.json", "w") as f:
+            json.dump(out, f, indent=1, default=float)
+        rows.append((name, us, derived_fn(out)))
+        return out
+
+    bench("fig6_volume", F.fig6_volume,
+          lambda o: "reduction=" + ",".join(
+              f"{k}:{v['reduction']*100:.0f}%" for k, v in o.items()))
+    bench("fig7_latency", F.fig7_latency,
+          lambda o: f"hier_speedup_vs_flat="
+                    f"{o['latency_s']['prunex_flat_ar']/o['latency_s']['prunex_hier']:.2f}x")
+    bench("fig8_breakdown", F.fig8_breakdown,
+          lambda o: "inter_pod_frac="
+                    f"{o.get('fraction', {}).get('inter_pod (DCI)', 0)*100:.0f}%")
+    bench("table2_models", F.table2_models,
+          lambda o: ",".join(f"{k}:{v['params_m']:.0f}M"
+                             for k, v in o.items()))
+    if not quick:
+        bench("fig5_time_to_accuracy", F.fig5_time_to_accuracy,
+              lambda o: "bytes_to_target_ratio_ddp/prunex="
+              f"{o['bytes_to_target']['ddp']/max(o['bytes_to_target']['prunex'],1):.2f}x",
+              outer=8)
+        bench("fig9_strong_scaling", F.fig9_strong_scaling,
+              lambda o: "speedup@64gpu (rel. 8-GPU baseline): "
+                        f"prunex={o[64]['prunex']:.2f}x "
+                        f"ddp={o[64]['ddp']:.2f}x "
+                        f"topk={o[64]['topk']:.2f}x (paper: 6.75/5.81/3.71)")
+        bench("fig10_residuals", F.fig10_residuals,
+              lambda o: f"monotone_tail={o['monotone_tail']}")
+        bench("fig12_sparsity_accuracy", F.fig12_sparsity_accuracy,
+              lambda o: ",".join(f"keep{k}:loss={v['final_loss']:.2f}"
+                                 for k, v in o.items()))
+    rows.extend(kernel_rows(quick))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Quickstart: H-SADMM distributed pruning-aware training on a small LM.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs 10 outer iterations of the paper's Algorithm 1 on a reduced
+tinyllama-family model with 4 ADMM workers (2 virtual nodes x 2 workers),
+prints losses, residuals, mask drift and the inter-node communication
+savings from physical shrinkage.
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.train.engine import Engine
+from repro.train.loop import train
+
+cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+    hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=4, t_freeze=5,
+                        keep_rate=0.5))
+bundle = build(cfg)
+print("sparsity plan:", [f"{r.name}: keep {r.keep}/{r.groups}"
+                         for r in bundle.plan.rules])
+
+engine = Engine(bundle, make_host_mesh(),
+                consensus=ConsensusSpec(levels=(2, 2), compact_from_level=1))
+shape = ShapeConfig("quickstart", "train", seq_len=64, global_batch=8)
+state, report = train(engine, outer_iters=10, shape=shape, eta=3e-3)
+
+print(f"\nloss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+print(f"masks frozen at outer iteration {report.frozen_at}")
+print(f"inter-node bytes/round: compact={report.comm_bytes_internode[-1]/1e6:.2f}MB "
+      f"vs dense={report.comm_bytes_dense_equiv[-1]/1e6:.2f}MB "
+      f"({(1-report.comm_bytes_internode[-1]/report.comm_bytes_dense_equiv[-1])*100:.0f}% saved)")

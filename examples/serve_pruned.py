@@ -1,0 +1,17 @@
+"""Serving example: batched greedy decoding with a KV cache, dense vs the
+physically-shrunk (structurally pruned) model — the paper's Table 1
+"inference acceleration via dense kernels" column.
+
+    PYTHONPATH=src python examples/serve_pruned.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+print("=== dense serving ===")
+serve.main(["--arch", "tinyllama-1.1b", "--smoke", "--batch", "2",
+            "--prompt-len", "16", "--gen", "8"])
+print("\n=== pruned (physically shrunk) serving ===")
+serve.main(["--arch", "tinyllama-1.1b", "--smoke", "--batch", "2",
+            "--prompt-len", "16", "--gen", "8", "--pruned"])

@@ -1,0 +1,26 @@
+"""Config registry: importing this package registers every architecture."""
+from .base import (ArchConfig, ConsensusSpec, HsadmmConfig, ShapeConfig,
+                   SHAPES, cells, get_config, list_archs, register)
+
+# one module per assigned architecture (+ the paper's ResNets)
+from . import mamba2_780m          # noqa: F401
+from . import qwen2_moe_a2_7b      # noqa: F401
+from . import granite_moe_3b_a800m # noqa: F401
+from . import minitron_4b          # noqa: F401
+from . import qwen2_5_3b           # noqa: F401
+from . import deepseek_coder_33b   # noqa: F401
+from . import tinyllama_1_1b      # noqa: F401
+from . import jamba_1_5_large_398b # noqa: F401
+from . import whisper_base         # noqa: F401
+from . import llama3_2_vision_90b  # noqa: F401
+from . import resnet               # noqa: F401
+
+ASSIGNED = [
+    "mamba2-780m", "qwen2-moe-a2.7b", "granite-moe-3b-a800m", "minitron-4b",
+    "qwen2.5-3b", "deepseek-coder-33b", "tinyllama-1.1b",
+    "jamba-1.5-large-398b", "whisper-base", "llama-3.2-vision-90b",
+]
+
+__all__ = ["ArchConfig", "ConsensusSpec", "HsadmmConfig", "ShapeConfig",
+           "SHAPES", "cells", "get_config", "list_archs", "register",
+           "ASSIGNED"]

@@ -1,0 +1,216 @@
+"""Architecture / shape / run configuration dataclasses.
+
+Every assigned architecture gets one module in ``repro/configs`` that builds an
+:class:`ArchConfig` with the exact published dimensions, plus a ``smoke()``
+variant (same family, tiny dims) used by CPU tests.
+
+Shapes come from the assignment and are globally shared by all LM archs:
+
+    train_4k     seq=4096    global_batch=256   (training)
+    prefill_32k  seq=32768   global_batch=32    (inference prefill)
+    decode_32k   seq=32768   global_batch=128   (one-token decode w/ KV cache)
+    long_500k    seq=524288  global_batch=1     (long-context decode; SSM/hybrid only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# H-SADMM / consensus configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HsadmmConfig:
+    """Hyper-parameters of the H-SADMM algorithm (paper §3, §5.1.5)."""
+
+    rho1: float = 1.5e-3          # intra-node penalty (paper init)
+    rho2: float = 1.5e-4          # inter-node penalty (paper init)
+    rho_max: float = 10.0         # cap (paper)
+    adapt_mu: float = 10.0        # residual-ratio threshold (Boyd §3.4.1)
+    adapt_tau: float = 2.0        # multiplicative update
+    local_steps: int = 8          # E, minibatch steps per outer iteration
+    t_freeze: int = 15            # outer iteration after which masks freeze
+    keep_rate: float = 0.5        # structured keep fraction (paper primary: 0.5)
+    mask_mode: str = "score_consensus"  # or "bitwise_or" (paper-faithful union)
+    bitwise_or_slack: float = 1.5  # static budget multiplier for bitwise_or mode
+    weight_decay: float = 1e-4    # lambda, applied on consensus z
+    eps_abs: float = 1e-4
+    eps_rel: float = 1e-3
+    # beyond-paper (§Perf): wire format of the top-level (inter-pod)
+    # compact payload exchange.  "int8" = per-leaf symmetric quantization
+    # exchanged via ring collective-permute, dequant-summed locally —
+    # 2x (bf16 models) / 4x (f32) fewer slow-fabric bytes on top of the
+    # paper's structural shrinkage.  None = dense-dtype AllReduce (paper).
+    comm_quant: str = None
+
+
+@dataclass(frozen=True)
+class ConsensusSpec:
+    """Hierarchy of the consensus reduction over the flat ADMM-worker dim.
+
+    ``levels`` factorizes the worker count W innermost-first:
+    ``(workers_per_node, nodes_per_pod, pods)``; trailing 1s may be omitted.
+    Level boundaries >= ``compact_from_level`` exchange *compacted* payloads
+    (the paper compacts at the node->global boundary, i.e. level 1).
+    """
+
+    levels: tuple[int, ...] = (4, 4)
+    compact_from_level: int = 1
+    granularity: str = "chip"  # "chip" | "pod" | "flat" (DESIGN.md §3.2)
+    node_size: int = 4         # data-ranks per virtual node (chip granularity)
+
+    @property
+    def num_workers(self) -> int:
+        out = 1
+        for l in self.levels:
+            out *= l
+        return out
+
+    @property
+    def num_nodes(self) -> int:
+        return self.num_workers // self.levels[0]
+
+    @property
+    def workers_per_node(self) -> int:
+        return self.levels[0]
+
+
+# ---------------------------------------------------------------------------
+# Architecture configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | cnn
+
+    # transformer backbone
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0  # per-expert hidden dim (defaults to d_ff)
+    # dispatch token-group count: routing/capacity runs independently per
+    # contiguous token group; set to the data-axis size for pod-granularity
+    # archs so dispatch buffers stay batch-sharded (DESIGN.md §8)
+    moe_dispatch_groups: int = 1
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+
+    # hybrid (jamba): one attention layer per `attn_period` layers
+    attn_period: int = 0
+
+    # enc-dec (whisper): encoder depth (n_layers = decoder depth)
+    enc_layers: int = 0
+    enc_seq: int = 1500  # audio frame positions (stub embeddings)
+
+    # vlm: one cross-attn layer per `cross_period` layers; image token count
+    cross_period: int = 0
+    img_tokens: int = 1601
+
+    # cnn (ResNet family)
+    cnn_blocks: tuple[int, ...] = ()
+    cnn_widths: tuple[int, ...] = ()
+    cnn_bottleneck: bool = False
+    cnn_width_mult: int = 1
+    img_size: int = 32
+    n_classes: int = 10
+
+    # numerics / distribution policy
+    param_dtype: str = "float32"
+    consensus_dtype: str = "float32"
+    remat: bool = True
+    grad_accum: int = 1
+    consensus: ConsensusSpec = field(default_factory=ConsensusSpec)
+    hsadmm: HsadmmConfig = field(default_factory=HsadmmConfig)
+
+    # which structured groups are pruned (model-dependent, see models/*)
+    prune_targets: tuple[str, ...] = ()
+
+    # shapes this arch skips, with reasons (DESIGN.md §5)
+    skip_shapes: tuple[str, ...] = ()
+
+    @property
+    def kv_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def d_expert_eff(self) -> int:
+        return self.d_expert or self.d_ff
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Registry ------------------------------------------------------------------
+
+_REGISTRY: dict[str, "tuple"] = {}
+
+
+def register(name: str, full_fn, smoke_fn) -> None:
+    _REGISTRY[name] = (full_fn, smoke_fn)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    full_fn, smoke_fn = _REGISTRY[name]
+    return smoke_fn() if smoke else full_fn()
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def cells(arch: ArchConfig) -> list[str]:
+    """Shape names this arch runs in the dry-run matrix."""
+    return [s for s in SHAPES if s not in arch.skip_shapes]

@@ -1,0 +1,40 @@
+"""DeepSeek-Coder-33B — llama-arch dense LM.
+[arXiv:2401.14196; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-coder-33b",
+        family="dense",
+        n_layers=62,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=19200,
+        vocab=32256,
+        param_dtype="bfloat16",
+        grad_accum=4,
+        prune_targets=("ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip", node_size=16),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+        param_dtype="float32",
+        grad_accum=1,
+    )
+
+
+register("deepseek-coder-33b", full, smoke)

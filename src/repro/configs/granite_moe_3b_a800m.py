@@ -1,0 +1,44 @@
+"""Granite-3.0-3B-A800M MoE — 40 routed experts, top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=512,
+        vocab=49155,
+        n_experts=40,
+        moe_top_k=8,
+        d_expert=512,
+        param_dtype="bfloat16",
+        prune_targets=("moe_ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        param_dtype="float32",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=32,
+        vocab=307,
+        n_experts=8,
+        moe_top_k=2,
+        d_expert=32,
+    )
+
+
+register("granite-moe-3b-a800m", full, smoke)

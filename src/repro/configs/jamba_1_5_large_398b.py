@@ -1,0 +1,53 @@
+"""Jamba-1.5-Large (398B) — Mamba:attn 7:1 hybrid, MoE 16e top-2.
+[arXiv:2403.19887; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab=65536,
+        n_experts=16,
+        moe_top_k=2,
+        moe_dispatch_groups=16,
+        attn_period=8,
+        ssm_state=128,
+        ssm_expand=2,
+        ssm_head_dim=128,
+        ssm_conv=4,
+        ssm_chunk=256,
+        param_dtype="bfloat16",
+        grad_accum=8,
+        prune_targets=("ssm_heads", "ffn", "moe_ffn", "heads"),
+        consensus=ConsensusSpec(granularity="pod"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        grad_accum=1,
+        n_layers=8,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+        n_experts=4,
+        moe_top_k=2,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_chunk=8,
+        param_dtype="float32",
+    )
+
+
+register("jamba-1.5-large-398b", full, smoke)

@@ -1,0 +1,43 @@
+"""Llama-3.2-Vision-90B backbone — cross-attn image layers (vision tower stubbed).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab=128256,
+        cross_period=5,
+        img_tokens=1601,
+        param_dtype="bfloat16",
+        grad_accum=4,
+        prune_targets=("ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="pod"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=10,
+        cross_period=5,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+        img_tokens=16,
+        param_dtype="float32",
+    )
+
+
+register("llama-3.2-vision-90b", full, smoke)

@@ -1,0 +1,38 @@
+"""Minitron-4B — width/depth-pruned Nemotron dense LM.
+[arXiv:2407.14679; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="minitron-4b",
+        family="dense",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=9216,
+        vocab=256000,
+        param_dtype="bfloat16",
+        prune_targets=("ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        param_dtype="float32",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+    )
+
+
+register("minitron-4b", full, smoke)

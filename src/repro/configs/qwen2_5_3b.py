@@ -1,0 +1,40 @@
+"""Qwen2.5-3B — dense GQA LM with QKV bias.
+[hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2.5-3b",
+        family="dense",
+        n_layers=36,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=11008,
+        vocab=151936,
+        qkv_bias=True,
+        rope_theta=1000000.0,
+        param_dtype="bfloat16",
+        prune_targets=("ffn",),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        param_dtype="float32",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+    )
+
+
+register("qwen2.5-3b", full, smoke)

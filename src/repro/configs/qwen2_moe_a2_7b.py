@@ -1,0 +1,47 @@
+"""Qwen1.5/2-MoE-A2.7B — 4 shared + 60 routed experts, top-4.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-moe-a2.7b",
+        family="moe",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab=151936,
+        qkv_bias=True,
+        n_experts=60,
+        moe_top_k=4,
+        n_shared_experts=4,
+        d_expert=1408,
+        param_dtype="bfloat16",
+        prune_targets=("moe_ffn", "ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        param_dtype="float32",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=32,
+        vocab=307,
+        n_experts=8,
+        moe_top_k=2,
+        n_shared_experts=2,
+        d_expert=32,
+    )
+
+
+register("qwen2-moe-a2.7b", full, smoke)

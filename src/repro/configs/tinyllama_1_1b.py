@@ -1,0 +1,38 @@
+"""TinyLlama-1.1B — llama2-arch small dense LM.
+[arXiv:2401.02385; hf]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="tinyllama-1.1b",
+        family="dense",
+        n_layers=22,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=5632,
+        vocab=32000,
+        param_dtype="bfloat16",
+        prune_targets=("ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        param_dtype="float32",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+    )
+
+
+register("tinyllama-1.1b", full, smoke)

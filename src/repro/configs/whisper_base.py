@@ -1,0 +1,40 @@
+"""Whisper-base — enc-dec audio transformer (conv frontend stubbed).
+[arXiv:2212.04356; unverified]
+"""
+from .base import ArchConfig, ConsensusSpec, HsadmmConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-base",
+        family="audio",
+        n_layers=6,
+        enc_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=2048,
+        vocab=51865,
+        enc_seq=1500,
+        prune_targets=("ffn", "heads"),
+        skip_shapes=("long_500k",),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2,
+        enc_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=307,
+        enc_seq=32,
+    )
+
+
+register("whisper-base", full, smoke)

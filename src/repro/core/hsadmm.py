@@ -1,0 +1,311 @@
+"""H-SADMM state and the Phase-1 local update (paper §3.1, Alg. 1 line 4).
+
+State layout (DESIGN.md §3.3) — pure pytrees with leading consensus dims:
+
+    theta, mom, u  : (W, *param)        per ADMM worker
+    z[k], v[k]     : (M_k, *param)      per level-k consensus group, k=1..K
+                     (M_k = W / prod(levels[:k]); M_K == 1 == global z)
+    rho[k]         : per-leaf arrays of shape leaf.shape[:stack_ndims]
+                     (layer-wise adaptive penalties, paper §3.4)
+    weights        : (W,) f32           straggler/failure contribution weights
+    masks          : per-rule {idx, valid, mask, drift}
+    k              : outer iteration counter
+
+The worker dim W is flat, outer-major over (pod, node, worker) so that
+group-reshapes align with the mesh device order (prototype-validated).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ConsensusSpec, HsadmmConfig
+from .masks import MaskSyncConfig, budget as rule_budget
+from .sparsity import SparsityPlan, get_leaf
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Static engine spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Everything static the H-SADMM engine needs (closed over by jit)."""
+
+    plan: SparsityPlan
+    consensus: ConsensusSpec
+    hp: HsadmmConfig
+    # (prefix, ndims) pairs; longest matching prefix wins, default 0.  A
+    # leaf's first `ndims` axes are scan-stack axes (layer index etc.) that
+    # get independent layer-wise penalties/residuals (paper §3.4).
+    stack_map: tuple[tuple[str, int], ...] = (("blocks", 1),)
+    use_momentum: bool = True
+    momentum: float = 0.9
+
+    @property
+    def sync_cfg(self) -> MaskSyncConfig:
+        return MaskSyncConfig(self.hp.mask_mode, self.hp.bitwise_or_slack)
+
+    @property
+    def budgets(self) -> dict:
+        return {r.name: rule_budget(r, self.sync_cfg) for r in self.plan.rules}
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.consensus.levels)
+
+    @property
+    def solo(self) -> bool:
+        return (self.consensus.num_workers == 1
+                and self.consensus.granularity == "pod")
+
+    def group_sizes(self) -> tuple[int, ...]:
+        return self.consensus.levels
+
+    def stack_ndims(self, key: str) -> int:
+        best, best_len = 0, -1
+        for prefix, nd in self.stack_map:
+            if (key.startswith(prefix + "/") or key == prefix) \
+                    and len(prefix) > best_len:
+                best, best_len = nd, len(prefix)
+        return best
+
+
+def leaf_keys(params: Params, prefix: str = "") -> list[str]:
+    out = []
+    for k, v in params.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.extend(leaf_keys(v, path))
+        else:
+            out.append(path)
+    return out
+
+
+def tree_map_leaves(fn: Callable, params: Params) -> Params:
+    """Map over leaves with their '/'-joined key: fn(key, leaf)."""
+    def rec(node, prefix):
+        out = {}
+        for k, v in node.items():
+            path = f"{prefix}/{k}" if prefix else k
+            out[k] = rec(v, path) if isinstance(v, dict) else fn(path, v)
+        return out
+    return rec(params, "")
+
+
+# ---------------------------------------------------------------------------
+# grouping helpers over the leading consensus dim
+# ---------------------------------------------------------------------------
+
+
+def group_sum(x: jnp.ndarray, g: int, w: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(G*g, *p) -> (G, *p) sum over contiguous groups of g (optionally
+    weighted by w: (G*g,) broadcast over param dims)."""
+    if w is not None:
+        x = x * w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+    return x.reshape((-1, g) + x.shape[1:]).sum(axis=1)
+
+
+def ungroup(x: jnp.ndarray, g: int) -> jnp.ndarray:
+    """(G, *p) -> (G*g, *p) broadcast children from their group value."""
+    return jnp.broadcast_to(x[:, None], (x.shape[0], g) + x.shape[1:]) \
+              .reshape((x.shape[0] * g,) + x.shape[1:])
+
+
+def bcast_rho(rho: jnp.ndarray, leaf: jnp.ndarray, stack_ndims: int,
+              offset: int) -> jnp.ndarray:
+    """Broadcast a (stack,) penalty to a (lead..., stack, ...) leaf."""
+    shape = [1] * leaf.ndim
+    for i in range(stack_ndims):
+        shape[offset + i] = rho.shape[i]
+    return rho.reshape(shape).astype(leaf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# state init
+# ---------------------------------------------------------------------------
+
+
+def init_state(params0: Params, spec: EngineSpec) -> dict:
+    """Replicate initial params to every worker/node and zero the duals.
+
+    params0 has *no* leading dims (a single model init); all workers start
+    from the same point (paper Alg. 1 line 1), masks start all-ones.
+    """
+    W = spec.consensus.num_workers
+    levels = spec.consensus.levels
+
+    def rep(n):
+        return lambda _, x: jnp.broadcast_to(x, (n,) + x.shape).copy() \
+            if n > 1 else x[None]
+
+    theta = tree_map_leaves(rep(W), params0)
+    state = {"theta": theta, "k": jnp.zeros((), jnp.int32),
+             "weights": jnp.ones((W,), jnp.float32)}
+    if spec.use_momentum:
+        state["mom"] = jax.tree.map(jnp.zeros_like, theta)
+    if spec.solo:
+        # Single-worker degenerate case (pod granularity on one pod): no
+        # consensus variables exist; training is plain (FSDP) SGD and the
+        # paper's technique reduces to direct structured projection of
+        # theta (DESIGN.md §5 arch-applicability).
+        state["masks"] = _init_masks(params0, spec)
+        return state
+    u = jax.tree.map(jnp.zeros_like, theta)
+    state["u"] = u
+
+    m = W
+    zs, vs = [], []
+    for g in levels:
+        m //= g
+        zk = tree_map_leaves(rep(m), params0)
+        zs.append(zk)
+        if m > 1 or True:  # keep uniform structure; top-level v unused
+            vs.append(jax.tree.map(jnp.zeros_like, zk))
+    vs = vs[:-1]  # duals exist between consecutive levels only
+    state["z"] = zs
+    state["v"] = vs
+
+    # layer-wise penalties rho[k]: list over level boundaries (K entries:
+    # rho[0] = worker<->z1 (paper rho1), rho[k>=1] = z_k<->z_{k+1})
+    def rho_tree(val):
+        return tree_map_leaves(
+            lambda key, x: jnp.full(x.shape[:spec.stack_ndims(key)], val,
+                                    jnp.float32), params0)
+    rhos = [rho_tree(spec.hp.rho1)]
+    for _ in range(len(levels) - 1):
+        rhos.append(rho_tree(spec.hp.rho2))
+    state["rho"] = rhos
+
+    state["masks"] = _init_masks(params0, spec)
+    return state
+
+
+def _init_masks(params0: Params, spec: EngineSpec) -> dict:
+    # masks: all-ones init (paper line 1: m_global <- 1)
+    masks = {}
+    for rule in spec.plan.rules:
+        stack_shape = _rule_stack_shape(params0, rule)
+        B = spec.budgets[rule.name]
+        if rule.shards == 1:
+            idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32),
+                                   stack_shape + (B,))
+        else:  # balanced rules use block-local indices
+            idx = jnp.broadcast_to(
+                jnp.arange(B // rule.shards, dtype=jnp.int32),
+                stack_shape + (rule.shards, B // rule.shards))
+        masks[rule.name] = {
+            "idx": idx,
+            "valid": jnp.ones(idx.shape, jnp.float32),
+            "mask": jnp.ones(stack_shape + (rule.groups,), jnp.float32),
+            "drift": jnp.zeros((), jnp.float32),
+        }
+    return masks
+
+
+def _rule_stack_shape(params0: Params, rule) -> tuple[int, ...]:
+    leaf = get_leaf(params0, rule.leaves[0].key)
+    return leaf.shape[:rule.stack_ndims]
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: local prox-SGD step (Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+def local_step(state: dict, batch, loss_fn: Callable, spec: EngineSpec,
+               eta: float, grad_accum: int = 1) -> tuple[dict, jnp.ndarray]:
+    """One minibatch prox-SGD step on every worker in parallel.
+
+    loss_fn(params_one_worker, batch_one_worker) -> scalar.
+    batch leaves have leading dim W.  The prox gradient
+    rho1 * (theta - z1 + u) is added analytically (cheaper than autodiff
+    through the penalty).  grad_accum > 1 splits the per-worker batch into
+    microbatches and accumulates grads in a scan (activation memory drops
+    grad_accum-fold).  Returns (new_state, mean loss).
+    """
+    levels = spec.consensus.levels
+    theta = state["theta"]
+    if spec.solo:
+        u = z1_w = None
+    else:
+        u = state["u"]
+        z1_w = jax.tree.map(lambda z: ungroup(z, levels[0]), state["z"][0])
+
+    if grad_accum > 1:
+        def worker_vg(th, bw):
+            mb = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), bw)
+
+            def body(carry, b1):
+                l, g = jax.value_and_grad(loss_fn)(th, b1)
+                return (carry[0] + l, jax.tree.map(jnp.add, carry[1], g)), None
+
+            init = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(jnp.zeros_like, th))
+            (l, g), _ = jax.lax.scan(body, init, mb)
+            ga = jnp.float32(grad_accum)
+            return l / ga, jax.tree.map(lambda x: x / ga.astype(x.dtype), g)
+
+        grad_fn = jax.vmap(worker_vg)
+    else:
+        grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    losses, g = grad_fn(theta, batch)
+
+    rho1 = state.get("rho", [None])[0]
+
+    def upd(key, th):
+        gg = get_leaf(g, key)
+        if spec.solo:
+            gtot = gg
+        else:
+            zz = get_leaf(z1_w, key)
+            uu = get_leaf(u, key)
+            r = bcast_rho(get_leaf(rho1, key), th,
+                          spec.stack_ndims(key), offset=1)
+            gtot = gg + r * (th - zz.astype(th.dtype) + uu)
+        e = jnp.asarray(eta).astype(th.dtype)  # strong f32 eta would
+        # promote the whole update (and its backward) to f32 — 2x HBM
+        if spec.use_momentum:
+            mm = get_leaf(state["mom"], key)
+            mm = spec.momentum * mm + gtot
+            return th - e * mm, mm
+        return th - e * gtot, None
+
+    new_theta, new_mom = {}, {}
+    for key in leaf_keys(theta):
+        t, m = upd(key, get_leaf(theta, key))
+        new_theta[key] = t
+        new_mom[key] = m
+    theta = _unflatten(new_theta)
+    out = dict(state)
+    out["theta"] = theta
+    if spec.use_momentum:
+        out["mom"] = _unflatten(new_mom)
+    return out, jnp.mean(losses)
+
+
+def _unflatten(flat: dict) -> dict:
+    out: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def flatten(params: Params) -> dict:
+    return {k: get_leaf(params, k) for k in leaf_keys(params)}
+
+
+def unflatten(flat: dict) -> dict:
+    return _unflatten(flat)

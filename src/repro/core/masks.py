@@ -1,0 +1,94 @@
+"""Global mask synchronization and the freezing protocol (paper §4.3, §4.5).
+
+Node-level projections may disagree across nodes (different data shards), but
+dense collectives need shape agreement, so PruneX reconciles local masks into
+one global mask per rule before the inter-node exchange.  Two modes:
+
+``score_consensus`` (default; TPU-native, beyond-paper — DESIGN.md §2):
+    AllReduce the per-group *scores* (one f32 per group — negligible bytes) and
+    take a global top-alpha.  Masks are identical on every node by construction
+    and the compact payload is exactly ``alpha`` groups (static).
+
+``bitwise_or`` (paper-faithful, Eq. 14):
+    Per-node top-alpha masks are OR-reduced.  The union size is dynamic in
+    [alpha, M*alpha]; to stay XLA-static the compact budget is
+    ``B = min(C, ceil(slack*alpha))`` and the union is ranked by summed scores:
+    slots beyond the true union carry validity 0 and are excluded from the
+    averaged consensus (zero-weighted), so semantics match the paper's union
+    whenever the union fits the budget (it does once masks stabilize).
+
+Both return, per rule: ``idx (*stack, B) int32``, ``valid (*stack, B) f32``,
+``mask (*stack, C) f32`` — with B == keep for score_consensus.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .sparsity import GroupRule, SparsityPlan, topk_mask
+
+
+@dataclass(frozen=True)
+class MaskSyncConfig:
+    mode: str = "score_consensus"   # | "bitwise_or"
+    slack: float = 1.5              # bitwise_or static budget multiplier
+
+
+def budget(rule: GroupRule, cfg: MaskSyncConfig) -> int:
+    """Static compact-buffer group budget B for a rule."""
+    if cfg.mode == "score_consensus":
+        return rule.keep
+    b = int(rule.keep * cfg.slack + 0.999)
+    return min(rule.groups, max(b, rule.keep))
+
+
+def sync_masks(node_scores: jnp.ndarray, rule: GroupRule,
+               cfg: MaskSyncConfig) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Build the global mask from per-node squared group scores.
+
+    node_scores: (M, *stack, C) — squared Frobenius norms per node.
+    Returns (idx, valid, mask):
+      idx   (*stack, B) int32 — kept group indices (sorted),
+      valid (*stack, B) f32   — 1 for live slots, 0 for padding,
+      mask  (*stack, C) f32   — dense global mask (the paper's m^l).
+
+    The reduction over the node axis (axis 0) is the *only* cross-node traffic
+    this phase needs; operands are one scalar (score or bit) per group.
+    """
+    if cfg.mode == "score_consensus":
+        g = jnp.mean(node_scores, axis=0)                 # tiny AllReduce
+        mask, idx = topk_mask(g, rule.keep, rule.shards)
+        valid = jnp.ones(idx.shape, jnp.float32)
+        return idx, valid, mask
+
+    if cfg.mode == "bitwise_or":
+        assert rule.shards == 1, "bitwise_or requires unsharded group axes"
+        B = budget(rule, cfg)
+        local_mask, _ = topk_mask(node_scores, rule.keep)  # (M, *stack, C)
+        union = jnp.max(local_mask, axis=0)                # OR  (tiny AllReduce)
+        mean_scores = jnp.mean(node_scores, axis=0)        # ranking tie-break
+        ranked = union * (1.0 + mean_scores)               # union members first
+        _, idx = jax.lax.top_k(ranked, B)
+        idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+        valid = jnp.take_along_axis(union, idx, axis=-1)
+        mask = union
+        return idx, valid, mask
+
+    raise ValueError(f"unknown mask mode {cfg.mode!r}")
+
+
+def mask_drift(prev_mask: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Number of groups whose membership changed since last iteration.
+
+    The paper freezes masks once drift reaches zero (empirically within 5-15
+    outer iterations, Fig. 6); the orchestrator also enforces T_freeze.
+    """
+    return jnp.sum(jnp.abs(mask - prev_mask))
+
+
+def frozen_masks(mask_state: dict, plan: SparsityPlan) -> dict:
+    """Post-freeze: reuse cached (idx, valid, mask) — projection becomes an
+    elementwise multiply and buffer shapes are invariant (one-shot buffers)."""
+    return {r.name: mask_state[r.name] for r in plan.rules}

@@ -1,0 +1,37 @@
+"""Convergence monitoring (paper §3.4, Boyd §3.3.1).
+
+Layer-wise primal/dual residuals are produced by ``consensus_step`` in its
+info dict; this module turns them into the paper's stopping rule with
+absolute + relative feasibility thresholds:
+
+    eps_pri  = sqrt(n) * eps_abs + eps_rel * max(||theta||, ||z||)
+    eps_dual = sqrt(n) * eps_abs + eps_rel * ||rho . u||
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import HsadmmConfig
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def converged(state: dict, info: dict, hp: HsadmmConfig) -> jnp.ndarray:
+    """Global convergence test (Alg. 1 line 29-30)."""
+    n = tree_size(state["theta"])
+    th_n = tree_norm(state["theta"])
+    z_n = tree_norm(state["z"][0])
+    u_n = tree_norm(state["u"])
+    eps_pri = jnp.sqrt(float(n)) * hp.eps_abs + hp.eps_rel * jnp.maximum(th_n, z_n)
+    eps_dual = jnp.sqrt(float(n)) * hp.eps_abs + hp.eps_rel * u_n
+    return jnp.logical_and(info["r_primal"] < eps_pri,
+                           info["s_dual"] < eps_dual)

@@ -1,0 +1,236 @@
+"""Structured sparsity sets and Euclidean projections (paper §2.1, §3.2).
+
+A :class:`GroupRule` names a *structured group dimension* shared by one or more
+parameter leaves: conv filters (S_f), conv input channels (S_c), kernel spatial
+positions (S_s), FFN hidden units, attention heads, MoE expert hidden units...
+The sparsity set is the group-l0 ball  S = { W : ||m||_0 <= keep }  where m_g is
+the Frobenius norm of group g aggregated over every participating leaf.
+
+The Euclidean projection onto S keeps the ``keep`` groups of largest aggregated
+norm and zeroes the rest (StructADMM closed form).  Because the l0-ball radius
+is a *static* integer, the projection support has a static size — the property
+the TPU adaptation exploits for static-shape buffer compaction (DESIGN.md §2).
+
+All functions operate on a flat ``dict[str, jnp.ndarray]`` of parameter leaves;
+``axis`` indices refer to the *param* shape (no leading consensus dims).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+@dataclass(frozen=True)
+class LeafAxis:
+    """A leaf's participation in a rule.
+
+    ``axis`` is the group axis within the leaf (no leading consensus dims).
+    Multi-axis tuples express composite groups (the paper's *shape* sparsity
+    S_s groups (C_in, K_H, K_W) positions); those rules are projection-only —
+    physical shrinkage slices along single filter/channel axes (paper §4.4.1).
+    """
+
+    key: str
+    axis: "int | tuple[int, ...]"
+
+    @property
+    def axes(self) -> tuple[int, ...]:
+        axes = (self.axis,) if isinstance(self.axis, int) else tuple(self.axis)
+        return tuple(sorted(axes))
+
+
+@dataclass(frozen=True)
+class GroupRule:
+    """One structured-sparsity constraint S^l (possibly spanning several leaves).
+
+    ``stack_ndims`` leading axes (shared by every leaf in the rule, e.g. the
+    scan-over-layers axis L) index *independent* instances of the constraint:
+    scores/masks have shape ``(*stack, groups)`` and top-k runs per instance.
+    """
+
+    name: str
+    leaves: tuple[LeafAxis, ...]
+    groups: int          # C, number of structured groups
+    keep: int            # alpha, static keep budget
+    stack_ndims: int = 1
+    # ``shards > 1`` = *balanced* structured pruning (TPU adaptation,
+    # DESIGN.md §2): the group axis is TP-sharded over `shards` devices, and
+    # the keep budget is split evenly per shard block (keep/shards kept in
+    # each C/shards block).  Top-k, gather and scatter then act on the
+    # *unsharded* intra-block axis, so shrinkage stays collective-free and
+    # the compact buffer remains evenly TP-sharded.  S_balanced ⊂ S, so the
+    # projection is still a valid (tighter) structured-sparsity projection.
+    shards: int = 1
+
+    def __post_init__(self):
+        assert 0 < self.keep <= self.groups, (self.name, self.keep, self.groups)
+        assert self.groups % self.shards == 0 and self.keep % self.shards == 0, \
+            (self.name, self.groups, self.keep, self.shards)
+        for la in self.leaves:
+            assert min(la.axes) >= self.stack_ndims, (self.name, la)
+        if self.shards > 1:
+            assert self.compactable, "balanced rules must be single-axis"
+
+    @property
+    def compactable(self) -> bool:
+        """Shrinkable rules slice one axis per leaf into contiguous dense
+        blocks (Eq. 15); composite-axis rules only mask."""
+        return all(len(la.axes) == 1 for la in self.leaves)
+
+
+@dataclass(frozen=True)
+class SparsityPlan:
+    rules: tuple[GroupRule, ...]
+
+    def rule(self, name: str) -> GroupRule:
+        for r in self.rules:
+            if r.name == name:
+                return r
+        raise KeyError(name)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(r.name for r in self.rules)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _leaf(params: Mapping, key: str) -> jnp.ndarray:
+    node = params
+    for part in key.split("/"):
+        node = node[part]
+    return node
+
+
+def _set_leaf(params: dict, key: str, value) -> dict:
+    """Pure functional leaf replacement in a nested dict."""
+    parts = key.split("/")
+    def rec(node, i):
+        node = dict(node)
+        if i == len(parts) - 1:
+            node[parts[i]] = value
+        else:
+            node[parts[i]] = rec(node[parts[i]], i + 1)
+        return node
+    return rec(params, 0)
+
+
+def get_leaf(params: Mapping, key: str) -> jnp.ndarray:
+    return _leaf(params, key)
+
+
+def set_leaf(params: dict, key: str, value) -> dict:
+    return _set_leaf(params, key, value)
+
+
+# ---------------------------------------------------------------------------
+# scores / masks / projection
+# ---------------------------------------------------------------------------
+
+
+def group_scores(params: Mapping, rule: GroupRule, offset: int = 0) -> jnp.ndarray:
+    """Aggregated squared-Frobenius group magnitudes, shape (*lead, *stack, C).
+
+    ``offset`` is the number of leading consensus dims (worker/node) present on
+    every leaf; those are preserved in the output so scores stay per-worker.
+    Returns *squared* norms (monotone in the norm, cheaper; top-k invariant).
+    """
+    total = None
+    dst = offset + rule.stack_ndims
+    for la in rule.leaves:
+        x = _leaf(params, la.key)
+        axes = tuple(a + offset for a in la.axes)
+        for i, ax in enumerate(axes):  # move group axes to front-after-stack
+            x = jnp.moveaxis(x, ax, dst + i)
+        reduce_axes = tuple(range(dst + len(axes), x.ndim))
+        s = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=reduce_axes)
+        s = s.reshape(s.shape[:dst] + (-1,))    # (*lead, *stack, C)
+        total = s if total is None else total + s
+    return total
+
+
+def topk_mask(scores: jnp.ndarray, keep: int, shards: int = 1
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-``keep`` mask along the last axis. Returns (mask, idx).
+
+    mask: float32 {0,1} of scores.shape.
+    idx (shards == 1): int32 (*batch, keep), global indices, sorted.
+    idx (shards  > 1): int32 (*batch, shards, keep/shards), *block-local*
+        indices into each C/shards block (balanced pruning) — gathers along
+        the intra-block axis are shard-local under TP.
+    """
+    if shards == 1:
+        _, idx = jax.lax.top_k(scores, keep)
+        idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+        mask = jnp.zeros(scores.shape, jnp.float32)
+        mask = jnp.put_along_axis(mask, idx, 1.0, axis=-1, inplace=False)
+        return mask, idx
+    C = scores.shape[-1]
+    blk = scores.reshape(scores.shape[:-1] + (shards, C // shards))
+    _, idx = jax.lax.top_k(blk, keep // shards)
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    mask = jnp.zeros(blk.shape, jnp.float32)
+    mask = jnp.put_along_axis(mask, idx, 1.0, axis=-1, inplace=False)
+    return mask.reshape(scores.shape), idx
+
+
+def apply_mask_rule(params: dict, rule: GroupRule, mask: jnp.ndarray,
+                    offset: int = 0) -> dict:
+    """Zero out non-kept groups of every leaf in the rule (projection step).
+
+    ``mask`` has shape (*stack, C) or (*lead, *stack, C); it is broadcast over
+    the leaf's remaining axes.
+    """
+    for la in rule.leaves:
+        x = _leaf(params, la.key)
+        axes = tuple(a + offset for a in la.axes)
+        # Reshape mask for broadcast: last mask axis (size C = prod of the
+        # group-axis dims) factors over `axes`; the stack axes sit at
+        # positions offset..offset+stack_ndims; any extra leading mask dims
+        # (consensus dims, possibly size-1 broadcasts inserted by the
+        # caller) align with the leaf's first dims.
+        shape = [1] * x.ndim
+        m_nd = mask.ndim
+        for i in range(rule.stack_ndims):
+            shape[offset + i] = mask.shape[m_nd - 1 - rule.stack_ndims + i]
+        for ax in axes:
+            shape[ax] = x.shape[ax]
+        lead_extra = m_nd - rule.stack_ndims - 1
+        for i in range(lead_extra):
+            shape[i] = mask.shape[i]
+        m = mask.reshape(shape)
+        params = _set_leaf(params, la.key, x * m.astype(x.dtype))
+    return params
+
+
+def project(params: dict, plan: SparsityPlan, offset: int = 0) -> tuple[dict, dict]:
+    """Sequential Euclidean projection onto the intersection of all rules.
+
+    The paper (§3.2) notes sequential application is exact because structural
+    groups are orthogonal in the GEMM representation.  Returns (projected
+    params, {rule_name: (mask, idx)}).
+    """
+    masks = {}
+    for rule in plan.rules:
+        s = group_scores(params, rule, offset)
+        # scores may carry leading consensus dims; top_k applies along the
+        # last axis regardless.
+        mask, idx = topk_mask(s, rule.keep, rule.shards)
+        params = apply_mask_rule(params, rule, mask, offset)
+        masks[rule.name] = (mask, idx)
+    return params, masks
+
+
+def keep_count(dim: int, keep_rate: float, multiple: int = 8) -> int:
+    """Static keep budget: round keep_rate*dim down to a hardware multiple."""
+    k = int(dim * keep_rate)
+    k = max(multiple, (k // multiple) * multiple)
+    return min(k, dim)

@@ -1,0 +1,50 @@
+"""Host input pipeline: deterministic stream -> device, with background
+prefetch so host batch synthesis overlaps device compute (the paper's Phase
+1 is compute-bound; input stall would pollute its timing benchmarks)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+
+
+def batches(stream, extra_inputs=(), shape=None, start_step: int = 0
+            ) -> Iterator[dict]:
+    """Infinite iterator of global batches (leading worker dim), including
+    modality stubs (precomputed frame/patch embeddings per the assignment)."""
+    import numpy as np
+    step = start_step
+    while True:
+        b = stream.batch_at(step)
+        if extra_inputs:
+            rng = np.random.default_rng((step << 16) + 31)
+            W, bs = b[next(iter(b))].shape[:2]
+            for name, shp, dt in extra_inputs:
+                arr = rng.standard_normal((W, bs) + shp(shape),
+                                          dtype=np.float32)
+                b[name] = jax.numpy.asarray(arr).astype(dt)
+        yield b
+        step += 1
+
+
+def prefetch(it: Iterator, size: int = 2) -> Iterator:
+    """Background-thread prefetch (double buffering by default)."""
+    q: queue.Queue = queue.Queue(maxsize=size)
+    stop = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

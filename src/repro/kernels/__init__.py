@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (interpret-mode
+validated on CPU; see each module's VMEM/tiling notes)."""
+from .ops import (fused_prox_sgd, compact_groups, expand_groups,
+                  group_norms_sq, ssd_chunk_scan)
+
+__all__ = ["fused_prox_sgd", "compact_groups", "expand_groups",
+           "group_norms_sq", "ssd_chunk_scan"]

@@ -1,0 +1,39 @@
+"""Buffer shrinkage gather kernel (paper §4.4.1 packing / §4.4.3 recovery).
+
+Packs kept structured groups into a contiguous dense buffer:
+out[r, j] = x[r, idx[j]].  The paper calls this step "inherently
+memory-bandwidth bound"; tiling rows into VMEM and gathering along the lane
+dimension keeps it a single streaming pass.  Recovery (zero-fill expansion)
+reuses the same kernel with an inverse index into a zero-padded compact
+buffer (see ops.expand_groups), so scatter hardware is never needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, x_ref, out_ref):
+    out_ref[...] = jnp.take(x_ref[...], idx_ref[...], axis=1)
+
+
+def gather_groups(x, idx, *, block_r=256, interpret=False):
+    """x: (R, C) f32/bf16, idx: (B,) int32 -> (R, B)."""
+    R, C = x.shape
+    B = idx.shape[0]
+    br = min(block_r, R)
+    while R % br:
+        br -= 1
+    grid = (R // br,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((R, B), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((B,), lambda i: (0,)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, B), lambda i: (i, 0)),
+        interpret=interpret,
+    )(idx, x)

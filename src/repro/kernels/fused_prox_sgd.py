@@ -1,0 +1,50 @@
+"""Fused proximal-SGD update kernel (paper Eq. 8, Phase 1 hot path).
+
+The update reads 5 param-sized tensors and writes 2; unfused, XLA may
+materialize g_tot and the momentum product as separate HBM round-trips.
+On TPU this kernel streams (8,128)-aligned VMEM tiles once:
+
+    HBM traffic fused:   5 reads + 2 writes  = 7 x size
+    unfused worst case:  9-11 x size
+
+a ~1.4x win on the memory-bound Phase-1 update (§Perf hypothesis log).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(theta_ref, g_ref, z_ref, u_ref, mom_ref, out_t_ref, out_m_ref,
+            *, eta, rho, momentum):
+    th = theta_ref[...]
+    gtot = g_ref[...] + rho * (th - z_ref[...] + u_ref[...])
+    m_new = momentum * mom_ref[...] + gtot
+    out_m_ref[...] = m_new
+    out_t_ref[...] = th - eta * m_new
+
+
+def fused_prox_sgd(theta, g, z, u, mom, *, eta, rho, momentum,
+                   block_r=256, block_c=512, interpret=False):
+    """2D tiles over a (R, C) view; all operands same shape/dtype."""
+    R, C = theta.shape
+    br = min(block_r, R)
+    while R % br:
+        br -= 1
+    bc = min(block_c, C)
+    while C % bc:
+        bc -= 1
+    grid = (R // br, C // bc)
+    bs = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_kernel, eta=eta, rho=rho, momentum=momentum),
+        out_shape=(jax.ShapeDtypeStruct(theta.shape, theta.dtype),
+                   jax.ShapeDtypeStruct(mom.shape, mom.dtype)),
+        grid=grid,
+        in_specs=[bs] * 5,
+        out_specs=(bs, bs),
+        interpret=interpret,
+    )(theta, g, z, u, mom)

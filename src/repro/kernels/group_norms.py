@@ -1,0 +1,48 @@
+"""Squared group-norm reduction kernel (mask scores, paper §2.1).
+
+x: (G, C, K) -> (G, C) sum of squares over the fan-in axis K.  Grid is
+(G, C/bc, K/bk) with the K dimension sequential ("arbitrary"): partial
+sums accumulate into the output tile, which Pallas keeps revisiting for
+the same (g, c) block — the standard reduction pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(x * x, axis=-1)
+
+
+def group_norms_sq(x, *, block_c=128, block_k=512, interpret=False):
+    G, C, K = x.shape
+    bc = min(block_c, C)
+    while C % bc:
+        bc -= 1
+    bk = min(block_k, K)
+    while K % bk:
+        bk -= 1
+    grid = (G, C // bc, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((G, C), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bc, bk), lambda g, c, k: (g, c, k))],
+        out_specs=pl.BlockSpec((1, bc), lambda g, c, k: (g, c)),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))) if not interpret
+        else None,
+    )(x)

@@ -1,0 +1,67 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On the TPU target the kernels compile natively; on this CPU container they
+run in interpret mode (the kernel body executes as traced JAX) — the tests
+assert bit-level agreement with the ref.py oracles either way.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .compact import gather_groups as _gather
+from .fused_prox_sgd import fused_prox_sgd as _fused
+from .group_norms import group_norms_sq as _gnorms
+from .ssd_scan import ssd_chunk_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "rho", "momentum"))
+def fused_prox_sgd(theta, g, z, u, mom, *, eta, rho, momentum=0.9):
+    shape = theta.shape
+    flat = lambda x: x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    t, m = _fused(flat(theta), flat(g), flat(z), flat(u), flat(mom),
+                  eta=eta, rho=rho, momentum=momentum,
+                  interpret=_interpret())
+    return t.reshape(shape), m.reshape(shape)
+
+
+@jax.jit
+def compact_groups(x, idx):
+    """Pack kept groups: x (..., C, K) gathered along axis -2 by idx (B,)."""
+    shape = x.shape
+    x2 = jnp.moveaxis(x, -2, -1).reshape(-1, shape[-2])
+    out = _gather(x2, idx, interpret=_interpret())
+    out = out.reshape(shape[:-2] + (shape[-1], idx.shape[0]))
+    return jnp.moveaxis(out, -1, -2)
+
+
+@functools.partial(jax.jit, static_argnames=("full",))
+def expand_groups(c, idx, full: int):
+    """Zero-fill recovery via inverse-permutation gather (paper §4.4.3)."""
+    B = idx.shape[0]
+    inv = jnp.full((full,), B, jnp.int32).at[idx].set(
+        jnp.arange(B, dtype=jnp.int32))
+    shape = c.shape
+    c2 = jnp.moveaxis(c, -2, -1).reshape(-1, shape[-2])
+    c2 = jnp.pad(c2, ((0, 0), (0, 1)))
+    out = _gather(c2, inv, interpret=_interpret())
+    out = out.reshape(shape[:-2] + (shape[-1], full))
+    return jnp.moveaxis(out, -1, -2)
+
+
+@jax.jit
+def group_norms_sq(x):
+    """(G, C, K) -> (G, C) squared group norms."""
+    return _gnorms(x, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h"))
+def ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=128, block_h=8):
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, block_h=block_h,
+                interpret=_interpret())

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract the
+interpret-mode tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_prox_sgd_ref(theta, g, z, u, mom, *, eta, rho, momentum):
+    """Paper Eq. 8 + momentum, one fused memory pass:
+    g_tot = g + rho*(theta - z + u);  m' = mu*m + g_tot;  th' = th - eta*m'.
+    """
+    gtot = g + rho * (theta - z + u)
+    mom_new = momentum * mom + gtot
+    return theta - eta * mom_new, mom_new
+
+
+def gather_groups_ref(x, idx):
+    """x: (R, C), idx: (B,) -> (R, B) — the §4.4 packing gather (compaction
+    along the group axis; expansion reuses it with an inverse index into a
+    zero-padded buffer)."""
+    return jnp.take(x, idx, axis=1)
+
+
+def group_norms_ref(x):
+    """x: (G, C, K) -> squared Frobenius norms (G, C) over the trailing
+    fan-in axis (mask scores, paper §2.1)."""
+    return jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
+
+
+def ssd_chunk_scan_ref(x, dt, A, Bm, Cm, chunk):
+    """Mamba2 SSD chunked scan (models.ssm.ssd_scan is the system impl and
+    oracle; re-exported here so kernel tests depend only on kernels/)."""
+    from ..models.ssm import ssd_scan
+    return ssd_scan(x, dt, A, Bm, Cm, chunk)

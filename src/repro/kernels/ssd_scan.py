@@ -1,0 +1,94 @@
+"""Mamba2 SSD chunk-scan kernel (the mamba2/jamba compute hot-spot).
+
+Grid = (B, H/bh, T/Q) with the chunk dimension sequential: the SSM state
+h (bh, N, P) lives in a VMEM scratch buffer that persists across the
+sequential grid steps — the Pallas idiom for carried recurrences.  Per
+step the kernel computes the intra-chunk masked (Q,Q) product, the
+inter-chunk contribution from the carried state, and the state update —
+exactly the structure of models.ssm.ssd_scan (its oracle).
+
+VMEM working set per step (Q=128, bh=8, N=128, P=64, f32):
+  x (Q,bh,P) 256KB + decay (Q,Q,bh) 512KB + h (bh,N,P) 256KB + B/C (Q,N)
+  128KB  ~= 1.2MB  << 16MB VMEM; MXU dims (Q,N,P) are 128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+            *, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xq = x_ref[0].astype(jnp.float32)          # (Q, bh, P)
+    dtq = dt_ref[0].astype(jnp.float32)        # (Q, bh)
+    A = a_ref[...].astype(jnp.float32)         # (bh,)
+    Bq = b_ref[0].astype(jnp.float32)          # (Q, N)
+    Cq = c_ref[0].astype(jnp.float32)          # (Q, N)
+    h = h_ref[...]                             # (bh, N, P) f32 scratch
+
+    Q = xq.shape[0]
+    cum = jnp.cumsum(dtq * A[None, :], axis=0)             # (Q, bh)
+    decay = jnp.exp(cum[:, None, :] - cum[None, :, :])     # (Q, Q, bh)
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    decay = decay * causal[..., None]
+    cb = jnp.dot(Cq, Bq.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    w = cb[..., None] * decay * dtq[None, :, :]            # (Q, S, bh)
+    y1 = jnp.einsum("qsh,shp->qhp", w, xq)
+    y2 = jnp.einsum("qn,qh,hnp->qhp", Cq, jnp.exp(cum), h)
+    dec_end = jnp.exp(cum[-1:, :] - cum)                   # (Q, bh)
+    # sb: (Q, bh, N) = B_s (Q,N) x (dec_end*dt) (Q,bh)
+    sb = Bq[:, None, :] * (dec_end * dtq)[:, :, None]
+    S = jnp.einsum("shn,shp->hnp", sb, xq)
+    h_ref[...] = h * jnp.exp(cum[-1])[:, None, None] + S
+    y_ref[0] = (y1 + y2).astype(y_ref.dtype)
+    hout_ref[0] = h_ref[...]
+
+
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=128, block_h=8,
+                   interpret=False):
+    """x: (B,T,H,P), dt: (B,T,H), A: (H,), Bm/Cm: (B,T,N).
+    Returns (y: (B,T,H,P), h_final: (B,H,N,P))."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+    bh = min(block_h, H)
+    while H % bh:
+        bh -= 1
+    grid = (B, H // bh, nc)
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        out_shape=(jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+                   jax.ShapeDtypeStruct((B, H, N, P), jnp.float32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, bh, P), lambda b, hb, c: (b, c, hb, 0)),
+            pl.BlockSpec((1, Q, bh), lambda b, hb, c: (b, c, hb)),
+            pl.BlockSpec((bh,), lambda b, hb, c: (hb,)),
+            pl.BlockSpec((1, Q, N), lambda b, hb, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, hb, c: (b, c, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, Q, bh, P), lambda b, hb, c: (b, c, hb, 0)),
+            pl.BlockSpec((1, bh, N, P), lambda b, hb, c: (b, hb, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((bh, N, P), jnp.float32)],
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))) if not interpret
+        else None,
+    )(x, dt, A, Bm, Cm)
+    return y, h

@@ -1,0 +1,24 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+A function — never a module-level constant — so importing this module does
+not touch jax device state.  Mesh axes:
+  pod   : inter-pod boundary (slow DCI fabric)  [multi-pod only]
+  data  : ADMM-worker / data-parallel axis (intra-pod ICI)
+  model : tensor-parallel axis (intra-pod ICI, minor-most = fastest links)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = None):
+    """Small mesh over the locally available devices (tests/examples)."""
+    n = jax.device_count()
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,95 @@
+"""Serving launcher: batched greedy decoding with a KV/SSM cache, and the
+physically-shrunk ("pruned dense") serving mode — the paper's inference
+acceleration claim: structured pruning yields a genuinely SMALLER dense
+model (Table 1, last column).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
+        --smoke --batch 2 --prompt-len 16 --gen 8 --pruned
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..core.hsadmm import flatten, unflatten
+from ..core.shrinkage import compact_params
+from ..core.sparsity import project
+from ..models import build
+
+
+def prune_params_compact(bundle, params):
+    """Project params onto the sparsity plan, then PHYSICALLY SLICE the kept
+    groups out — smaller dense weights, the paper's §4.4 applied at serve
+    time.  Returns (compact params, keep masks)."""
+    proj, masks = project(params, bundle.plan)
+    idxs = {r.name: masks[r.name][1] for r in bundle.plan.rules}
+    compact = compact_params(proj, bundle.plan, idxs)
+    return compact, masks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--pruned", action="store_true",
+                    help="serve the physically-shrunk model")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    bundle = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = bundle.init(key)
+    if args.pruned:
+        # shrink FFN-family rules (whole-axis slices); serve with the
+        # compact config so GEMMs run at the reduced width
+        import dataclasses
+        compact, _ = prune_params_compact(bundle, params)
+        new_cfg = cfg
+        names = [r.name for r in bundle.plan.rules]
+        if any(n.startswith("ffn") for n in names):
+            rule = next(r for r in bundle.plan.rules
+                        if r.name.startswith("ffn"))
+            new_cfg = new_cfg.replace(d_ff=rule.keep)
+        bundle2 = build(new_cfg)
+        params = compact
+        bundle = dataclasses.replace(bundle2, cfg=new_cfg)
+        print(f"[serve] pruned model: d_ff -> {new_cfg.d_ff}")
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    S = P + G
+    tokens = jax.random.randint(key, (B, P), 0, cfg.vocab, jnp.int32)
+    cache = bundle.init_cache(B, S)
+    extras = {}
+    for name, shp, dt in bundle.extra_inputs:
+        extras[name] = jnp.zeros((B,) + shp(None), dt)
+
+    t0 = time.time()
+    logits, cache = jax.jit(bundle.prefill)(params, tokens, cache, **extras)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    decode = jax.jit(bundle.decode)
+    out = []
+    t0 = time.time()
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(G):
+        out.append(np.asarray(nxt)[:, 0])
+        logits, cache = decode(params, nxt, cache)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+    print(f"[serve] prefill {P} toks: {t_prefill*1e3:.1f} ms; "
+          f"decode {G} steps: {t_decode*1e3:.1f} ms "
+          f"({t_decode/G*1e3:.2f} ms/tok)")
+    print("[serve] generated:", np.stack(out, 1).tolist())
+
+
+if __name__ == "__main__":
+    main()

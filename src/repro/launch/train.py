@@ -1,0 +1,95 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \\
+        --smoke --outer-iters 20 --batch 8 --seq 64 --workers 4
+
+On this CPU container the mesh is the locally visible devices; on a real
+deployment the same entry point runs under the production mesh (the
+engine/loop are mesh-agnostic).  ``--baseline ddp|topk`` runs the paper's
+comparison trainers instead of H-SADMM.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ConsensusSpec, ShapeConfig
+from ..models import build
+from ..train.engine import Engine
+from ..train.loop import train
+from ..train import baselines
+from ..dist import ft
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shape", default=None, help="named shape (train_4k)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--node-size", type=int, default=2)
+    ap.add_argument("--outer-iters", type=int, default=20)
+    ap.add_argument("--eta", type=float, default=1e-3)
+    ap.add_argument("--keep-rate", type=float, default=None)
+    ap.add_argument("--mask-mode", default=None)
+    ap.add_argument("--baseline", default=None, choices=["ddp", "topk"])
+    ap.add_argument("--flat", action="store_true",
+                    help="PruneX (AR) flat-consensus ablation")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--drop-worker", default=None,
+                    help="j:k0:k1 — fail worker j during [k0,k1)")
+    ap.add_argument("--report", default=None, help="write JSON report here")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    hp = cfg.hsadmm
+    import dataclasses
+    if args.keep_rate is not None:
+        hp = dataclasses.replace(hp, keep_rate=args.keep_rate)
+    if args.mask_mode:
+        hp = dataclasses.replace(hp, mask_mode=args.mask_mode)
+    cfg = cfg.replace(hsadmm=hp)
+    bundle = build(cfg)
+    shape = SHAPES[args.shape] if args.shape else ShapeConfig(
+        "cli", "train", args.seq, args.batch)
+
+    if args.baseline == "ddp":
+        _, rep = baselines.ddp_train(bundle, args.workers, shape,
+                                     steps=args.outer_iters * hp.local_steps,
+                                     eta=args.eta, log=print)
+    elif args.baseline == "topk":
+        _, rep = baselines.topk_train(bundle, args.workers, shape,
+                                      steps=args.outer_iters * hp.local_steps,
+                                      eta=args.eta, log=print)
+    else:
+        mesh = make_host_mesh()
+        W = args.workers
+        ns = min(args.node_size, W)
+        cons = ConsensusSpec(levels=(ns, W // ns) if W // ns > 1 else (ns, 1),
+                             compact_from_level=1,
+                             granularity="flat" if args.flat else "chip")
+        if args.flat:
+            cons = ConsensusSpec(levels=(W,), compact_from_level=1,
+                                 granularity="flat")
+        eng = Engine(bundle, mesh, shape, consensus=cons)
+        policy = None
+        if args.drop_worker:
+            j, k0, k1 = map(int, args.drop_worker.split(":"))
+            policy = ft.fail_window({j: (k0, k1)})
+        _, rep = train(eng, outer_iters=args.outer_iters, shape=shape,
+                       eta=args.eta, ckpt_dir=args.ckpt_dir,
+                       ft_policy=policy)
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({k: v for k, v in rep.__dict__.items()}, f, indent=1)
+    print("final loss:", rep.losses[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Model zoo: one builder per architecture family (DESIGN.md §4/§5)."""
+from ..configs.base import ArchConfig
+from .api import ModelBundle, add_fsdp
+
+_FAMILY = {}
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    """Dispatch on cfg.family; imports are lazy to keep startup light."""
+    fam = cfg.family
+    if fam not in _FAMILY:
+        if fam in ("dense",):
+            from . import transformer as m
+        elif fam == "moe":
+            from . import moe as m
+        elif fam == "ssm":
+            from . import ssm as m
+        elif fam == "hybrid":
+            from . import hybrid as m
+        elif fam == "audio":
+            from . import encdec as m
+        elif fam == "vlm":
+            from . import vlm as m
+        elif fam == "cnn":
+            from . import cnn as m
+        else:
+            raise KeyError(f"unknown family {fam!r}")
+        _FAMILY[fam] = m
+    return _FAMILY[fam].build(cfg)
+
+
+__all__ = ["build", "ModelBundle", "add_fsdp"]

@@ -1,0 +1,109 @@
+"""Model protocol: every architecture exposes the same functional bundle.
+
+The H-SADMM engine and the launchers are model-agnostic; they only need:
+  * ``init(key)``            params (nested dict, NO leading consensus dims)
+  * ``train_loss(p, batch)`` scalar, per-worker
+  * ``prefill/decode``       serving entry points (+ ``init_cache``)
+  * ``param_specs``          PartitionSpec tree (TP layout; FSDP added by
+                             :func:`add_fsdp` for coarse-granularity archs)
+  * ``plan``                 structured-sparsity plan (paper S^l sets)
+  * ``stack_map``            (prefix, ndims) scan-stack metadata for
+                             layer-wise penalties
+  * ``train_inputs/serve_inputs`` ShapeDtypeStruct builders for the dry-run
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.sparsity import SparsityPlan
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    train_loss: Callable
+    param_specs: dict
+    plan: SparsityPlan
+    stack_map: tuple = (("blocks", 1),)
+    prefill: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    init_cache: Optional[Callable] = None          # (B, S) -> cache pytree
+    cache_specs: Optional[Callable] = None         # (B, S, mesh) -> spec tree
+    extra_inputs: tuple = ()                       # modality stubs, see below
+
+    # ---- dry-run input builders --------------------------------------------
+    def train_inputs(self, shape: ShapeConfig, workers: int) -> dict:
+        """Per-step batch as ShapeDtypeStructs with leading worker dim."""
+        b = shape.global_batch // workers
+        assert b >= 1, (shape.name, workers)
+        if self.cfg.family == "cnn":
+            s = self.cfg.img_size
+            return {"images": jax.ShapeDtypeStruct((workers, b, s, s, 3),
+                                                   jnp.float32),
+                    "labels": jax.ShapeDtypeStruct((workers, b), jnp.int32)}
+        out = {"tokens": jax.ShapeDtypeStruct((workers, b, shape.seq_len),
+                                              jnp.int32)}
+        for name, shp, dt in self.extra_inputs:
+            out[name] = jax.ShapeDtypeStruct((workers, b) + shp(shape), dt)
+        return out
+
+    def serve_inputs(self, shape: ShapeConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "prefill":
+            out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        else:  # decode: one new token against an S-long cache
+            cache = jax.eval_shape(lambda: self.init_cache(B, S))
+            out = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                   "cache": cache}
+        for name, shp, dt in self.extra_inputs:
+            out[name] = jax.ShapeDtypeStruct((B,) + shp(shape), dt)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec helpers
+# ---------------------------------------------------------------------------
+
+
+def specs_like(params, fn):
+    """Build a PartitionSpec tree by calling fn(key, leaf_shape_hint) — here
+    params may be a shape-tree from jax.eval_shape."""
+    def rec(node, prefix):
+        out = {}
+        for k, v in node.items():
+            path = f"{prefix}/{k}" if prefix else k
+            out[k] = rec(v, path) if isinstance(v, dict) else fn(path, v)
+        return out
+    return rec(params, "")
+
+
+def add_fsdp(specs: dict, shapes: dict, axis: str = "data", size: int = 16,
+             skip_axes: tuple = ("model",)) -> dict:
+    """ZeRO-3-style extra sharding: for every leaf, shard the largest free
+    dim divisible by ``size`` over ``axis`` (used by node/pod-granularity
+    archs, DESIGN.md §3.2)."""
+    def one(spec: P, shape) -> P:
+        if axis in spec:
+            return spec
+        entries = list(spec) + [None] * (len(shape.shape) - len(spec))
+        best, best_dim = -1, -1
+        for i, (e, dim) in enumerate(zip(entries, shape.shape)):
+            if e is None and dim % size == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0:
+            entries[best] = axis
+        return P(*entries)
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def pad_to(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

@@ -1,0 +1,220 @@
+"""ResNet family (paper §5.1.3: ResNet-18, ResNet-152, WideResNet-50-2) on
+CIFAR-style inputs — the PruneX paper's own evaluation models.
+
+GroupNorm replaces BatchNorm so the model stays purely functional (no
+running-stat buffers outside the consensus state; BN statistics are not
+synchronized model parameters in the paper either — recorded in DESIGN.md).
+
+Structured sparsity is the paper's: per-conv-layer *filter* (S_f, C_out),
+*channel* (S_c, C_in) and optional *shape* (S_s, composite (KH,KW,Cin) —
+projection-only) rules, one rule per conv leaf, with layer-wise adaptive
+penalties falling out of the per-leaf rho arrays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from .api import ModelBundle
+from . import layers as L
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def conv_init(key, kh, kw, cin, cout, dtype):
+    return L.dense_init(key, (kh, kw, cin, cout), kh * kw * cin, dtype)
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(B, H, W, C).astype(x.dtype) * scale + bias
+
+
+def _gn_params(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def init_basic_block(key, cin, cout, stride, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout, dtype),
+        "gn1": _gn_params(cout, dtype),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout, dtype),
+        "gn2": _gn_params(cout, dtype),
+    }
+    if stride != 1 or cin != cout:
+        p["down"] = conv_init(ks[2], 1, 1, cin, cout, dtype)
+        p["gnd"] = _gn_params(cout, dtype)
+    return p
+
+
+def basic_block(p, x, stride):
+    y = jax.nn.relu(group_norm(conv(x, p["conv1"], stride),
+                               p["gn1"]["scale"], p["gn1"]["bias"]))
+    y = group_norm(conv(y, p["conv2"]), p["gn2"]["scale"], p["gn2"]["bias"])
+    sc = x
+    if "down" in p:
+        sc = group_norm(conv(x, p["down"], stride),
+                        p["gnd"]["scale"], p["gnd"]["bias"])
+    return jax.nn.relu(y + sc)
+
+
+def init_bottleneck(key, cin, cmid, cout, stride, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": conv_init(ks[0], 1, 1, cin, cmid, dtype),
+        "gn1": _gn_params(cmid, dtype),
+        "conv2": conv_init(ks[1], 3, 3, cmid, cmid, dtype),
+        "gn2": _gn_params(cmid, dtype),
+        "conv3": conv_init(ks[2], 1, 1, cmid, cout, dtype),
+        "gn3": _gn_params(cout, dtype),
+    }
+    if stride != 1 or cin != cout:
+        p["down"] = conv_init(ks[3], 1, 1, cin, cout, dtype)
+        p["gnd"] = _gn_params(cout, dtype)
+    return p
+
+
+def bottleneck(p, x, stride):
+    y = jax.nn.relu(group_norm(conv(x, p["conv1"]),
+                               p["gn1"]["scale"], p["gn1"]["bias"]))
+    y = jax.nn.relu(group_norm(conv(y, p["conv2"], stride),
+                               p["gn2"]["scale"], p["gn2"]["bias"]))
+    y = group_norm(conv(y, p["conv3"]), p["gn3"]["scale"], p["gn3"]["bias"])
+    sc = x
+    if "down" in p:
+        sc = group_norm(conv(x, p["down"], stride),
+                        p["gnd"]["scale"], p["gnd"]["bias"])
+    return jax.nn.relu(y + sc)
+
+
+def init(cfg: ArchConfig, key):
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    base = cfg.cnn_widths[0]
+    p = {"stem": conv_init(ks[0], 3, 3, 3, base, dtype),
+         "gn0": _gn_params(base, dtype)}
+    cin = base
+    ki = 1
+    for si, (blocks, width) in enumerate(zip(cfg.cnn_blocks, cfg.cnn_widths)):
+        stage = {}
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            key_b = jax.random.fold_in(ks[min(ki, 7)], si * 100 + bi)
+            if cfg.cnn_bottleneck:
+                cmid = width * cfg.cnn_width_mult
+                cout = width * 4
+                stage[f"b{bi}"] = init_bottleneck(key_b, cin, cmid, cout,
+                                                  stride, dtype)
+                cin = cout
+            else:
+                stage[f"b{bi}"] = init_basic_block(key_b, cin, width, stride,
+                                                   dtype)
+                cin = width
+        p[f"layer{si}"] = stage
+    p["fc_w"] = L.dense_init(ks[7], (cin, cfg.n_classes), cin, dtype)
+    p["fc_b"] = jnp.zeros((cfg.n_classes,), dtype)
+    return p
+
+
+def forward(cfg: ArchConfig, params, images):
+    x = jax.nn.relu(group_norm(conv(images, params["stem"]),
+                               params["gn0"]["scale"], params["gn0"]["bias"]))
+    fn = bottleneck if cfg.cnn_bottleneck else basic_block
+    for si, blocks in enumerate(cfg.cnn_blocks):
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = fn(params[f"layer{si}"][f"b{bi}"], x, stride)
+    x = jnp.mean(x, axis=(1, 2))
+    return jnp.einsum("bc,cn->bn", x, params["fc_w"]) + params["fc_b"]
+
+
+def train_loss(cfg: ArchConfig, params, batch):
+    logits = forward(cfg, params, batch["images"]).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tl = jnp.take_along_axis(logits, labels[:, None], axis=-1)[..., 0]
+    # paper Eq. 1: CE + L2 weight decay (lambda/2 ||W||^2) folded into the
+    # consensus z-update; the bare loss here is plain CE.
+    return jnp.mean(lse - tl)
+
+
+def accuracy(cfg: ArchConfig, params, batch):
+    logits = forward(cfg, params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(
+        jnp.float32))
+
+
+def conv_leaf_keys(params) -> list[str]:
+    from ..core.hsadmm import leaf_keys
+    return [k for k in leaf_keys(params)
+            if k.split("/")[-1].startswith(("conv", "stem", "down"))]
+
+
+def sparsity_plan(cfg: ArchConfig, params) -> SparsityPlan:
+    """Paper §2.1 sparsity sets, one rule per conv tensor (layer-wise)."""
+    from ..core.sparsity import get_leaf
+    hp = cfg.hsadmm
+    rules = []
+    for key in conv_leaf_keys(params):
+        w = get_leaf(params, key)
+        kh, kw, cin, cout = w.shape
+        if "filter" in cfg.prune_targets and cout >= 16:
+            rules.append(GroupRule(
+                f"f:{key}", (LeafAxis(key, 3),), groups=cout,
+                keep=keep_count(cout, hp.keep_rate, 8), stack_ndims=0))
+        if "channel" in cfg.prune_targets and cin >= 16:
+            rules.append(GroupRule(
+                f"c:{key}", (LeafAxis(key, 2),), groups=cin,
+                keep=keep_count(cin, hp.keep_rate, 8), stack_ndims=0))
+        if "shape" in cfg.prune_targets and kh * kw > 1 and cin >= 16:
+            rules.append(GroupRule(
+                f"s:{key}", (LeafAxis(key, (0, 1, 2)),),
+                groups=kh * kw * cin,
+                keep=keep_count(kh * kw * cin, hp.keep_rate, 8),
+                stack_ndims=0))
+    return SparsityPlan(tuple(rules))
+
+
+def param_specs(cfg: ArchConfig, params):
+    """Pure data-parallel (replicated weights): the paper's own CNN setting
+    (DDP); channel-parallel conv was measured to trip GSPMD's
+    feature_group partitioning at 16-way model sharding, and at <=67M
+    params replication is the right call anyway."""
+    def one(key, leaf):
+        return P(*([None] * leaf.ndim))
+    from .api import specs_like
+    return specs_like(params, one)
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda: init(cfg, key))
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(init, cfg),
+        train_loss=functools.partial(train_loss, cfg),
+        param_specs=param_specs(cfg, shapes),
+        plan=sparsity_plan(cfg, shapes),
+        stack_map=(),   # no scan stacks: every conv leaf is its own "layer"
+    )

@@ -1,0 +1,327 @@
+"""Jamba-style hybrid LM: Mamba/attention 7:1 interleave + MoE (arXiv:2403.19887).
+
+Layers are organized in super-blocks of ``attn_period`` (=8) sub-layers:
+positions 0..6 are Mamba2 mixers, position 7 is GQA attention; every mixer
+is followed by an FFN — dense SwiGLU at even positions, MoE at odd positions
+(4 dense + 4 MoE per super-block).  The model scans over super-blocks with
+stacked params, keeping HLO size O(1) in depth (72 layers = 9 super-blocks).
+
+Serving carries SSM states for the Mamba sub-layers (O(1) in context) plus a
+KV cache only for the 1-in-8 attention sub-layers — the reason jamba runs
+``long_500k``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from .api import ModelBundle, pad_to
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+
+MODEL_AXIS_SIZE = 16
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _sb(cfg):
+    period = cfg.attn_period
+    assert cfg.n_layers % period == 0
+    return cfg.n_layers // period, period
+
+
+def init_superblock(cfg: ArchConfig, key):
+    SB, period = _sb(cfg)
+    nm = period - 1              # mamba sub-layers
+    nf = period // 2             # dense FFNs (even positions)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    dense_ffn = jax.vmap(lambda k: L.init_swiglu(k, d, cfg.d_ff, _dt(cfg)))(
+        jax.random.split(ks[0], nf))
+    moe_ffn = jax.vmap(lambda k: MOE.init_moe_ffn(cfg, k))(
+        jax.random.split(ks[1], period - nf))
+    mamba = jax.vmap(lambda k: SSM.init_mixer(cfg, k))(
+        jax.random.split(ks[2], nm))
+    return {
+        "mamba": mamba,
+        "mamba_ln": jnp.ones((nm, d), _dt(cfg)),
+        "attn": L.init_attention(ks[3], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.kv_head_dim, cfg.qkv_bias, _dt(cfg)),
+        "attn_ln": jnp.ones((d,), _dt(cfg)),
+        "ffn": dense_ffn,
+        "ffn_ln": jnp.ones((nf, d), _dt(cfg)),
+        "moe": moe_ffn,
+        "moe_ln": jnp.ones((period - nf, d), _dt(cfg)),
+    }
+
+
+def init(cfg: ArchConfig, key):
+    SB, _ = _sb(cfg)
+    ks = jax.random.split(key, 3)
+    vp = pad_to(cfg.vocab, MODEL_AXIS_SIZE)
+    blocks = jax.vmap(lambda k: init_superblock(cfg, k))(
+        jax.random.split(ks[0], SB))
+    return {
+        "emb": L.dense_init(ks[1], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "head": L.dense_init(ks[2], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+    }
+
+
+def _ffn_at(cfg, bp, h, i, aux):
+    """Apply the FFN following sub-layer position i (even: dense, odd: MoE)."""
+    if i % 2 == 0:
+        j = i // 2
+        p = jax.tree.map(lambda x: x[j], bp["ffn"])
+        h = h + L.swiglu(p, L.rms_norm(h, bp["ffn_ln"][j], cfg.norm_eps))
+    else:
+        j = i // 2
+        p = jax.tree.map(lambda x: x[j], bp["moe"])
+        out, a = MOE.moe_ffn(cfg, p, L.rms_norm(h, bp["moe_ln"][j],
+                                                cfg.norm_eps))
+        h = h + out
+        aux = aux + a
+    return h, aux
+
+
+def superblock_apply(cfg: ArchConfig, h, bp, positions, state=None,
+                     q_chunk=512, k_chunk=512):
+    """state: None (train) or dict of per-superblock caches."""
+    _, period = _sb(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_state = {} if state is not None else None
+    for i in range(period - 1):
+        mp = jax.tree.map(lambda x: x[i], bp["mamba"])
+        st = None
+        if state is not None:
+            st = {"ssm": state["ssm"][i], "conv_x": state["conv_x"][i],
+                  "conv_B": state["conv_B"][i], "conv_C": state["conv_C"][i]}
+        out, ns = SSM.mixer_apply(
+            cfg, mp, L.rms_norm(h, bp["mamba_ln"][i], cfg.norm_eps), state=st)
+        h = h + out
+        if state is not None:
+            for k2 in ("ssm", "conv_x", "conv_B", "conv_C"):
+                new_state.setdefault(k2, []).append(ns[k2])
+        h, aux = _ffn_at(cfg, bp, h, i, aux)
+    # attention sub-layer (position period-1)
+    cache = None
+    if state is not None:
+        cache = {"k": state["k"], "v": state["v"], "len": state["len"]}
+    a, nc = L.attention(bp["attn"], L.rms_norm(h, bp["attn_ln"], cfg.norm_eps),
+                        positions=positions, causal=True,
+                        rope_theta=cfg.rope_theta, cache=cache,
+                        q_chunk=q_chunk, k_chunk=k_chunk)
+    h = h + a
+    h, aux = _ffn_at(cfg, bp, h, period - 1, aux)
+    if state is not None:
+        new_state = {k2: jnp.stack(v) for k2, v in new_state.items()}
+        new_state.update(k=nc["k"], v=nc["v"])
+    return h, new_state, aux
+
+
+def train_loss(cfg: ArchConfig, params, batch, aux_weight=0.01):
+    tokens = batch["tokens"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(carry, bp):
+        h, aux = carry
+        h = L.constrain_seq(h)
+        h, _, a = superblock_apply(cfg, h, bp, positions)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    tgt, valid = L.causal_targets(tokens)
+    SB, _ = _sb(cfg)
+    return L.chunked_xent(h, params["head"], tgt, valid) + aux_weight * aux / SB
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int):
+    SB, period = _sb(cfg)
+    nm = period - 1
+    d_in, H, hd, N = SSM.dims(cfg)
+    K = cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((SB, nm, B, H, N, hd), jnp.float32),
+        "conv_x": jnp.zeros((SB, nm, B, K - 1, H, hd), _dt(cfg)),
+        "conv_B": jnp.zeros((SB, nm, B, K - 1, N), _dt(cfg)),
+        "conv_C": jnp.zeros((SB, nm, B, K - 1, N), _dt(cfg)),
+        "k": jnp.zeros((SB, B, S, cfg.n_kv_heads, cfg.kv_head_dim), _dt(cfg)),
+        "v": jnp.zeros((SB, B, S, cfg.n_kv_heads, cfg.kv_head_dim), _dt(cfg)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def step(cfg: ArchConfig, params, tokens, cache, q_chunk=512, k_chunk=512):
+    B, T = tokens.shape
+    start = cache["len"]
+    positions = start + jnp.broadcast_to(jnp.arange(T), (B, T))
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(h, xs):
+        bp, ssm, cx, cB, cC, ck, cv = xs
+        st = {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+              "k": ck, "v": cv, "len": start}
+        h, ns, _ = superblock_apply(cfg, h, bp, positions, state=st,
+                                    q_chunk=q_chunk, k_chunk=k_chunk)
+        return h, (ns["ssm"], ns["conv_x"], ns["conv_B"], ns["conv_C"],
+                   ns["k"], ns["v"])
+
+    h, (ssm, cx, cB, cC, ck, cv) = jax.lax.scan(
+        body, h, (params["blocks"], cache["ssm"], cache["conv_x"],
+                  cache["conv_B"], cache["conv_C"], cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+                    "k": ck, "v": cv, "len": start + T}
+
+
+def param_specs(cfg: ArchConfig):
+    # Jamba's SSD head count (128) is TP-divisible: shard the HEAD axis over
+    # `model` (per-head independence = clean TP), so every (..., H, ...) SSD
+    # intermediate — including the (Q,Q,H) decay blocks — shards 16-way.
+    # The ssm_heads rule is then *balanced* (shards=16), like ffn.
+    _, H, _, _ = SSM.dims(cfg)
+    if H % MODEL_AXIS_SIZE:   # smoke dims: fall back to hd sharding
+        ssm_sp = SSM.param_specs(cfg)["blocks"]["mixer"]
+        mamba = {k2: P(*((None,) + tuple(v))) for k2, v in ssm_sp.items()}
+        return _assemble_specs(cfg, mamba)
+    mamba = {
+        "wz": P(None, None, None, "model", None),
+        "wx": P(None, None, None, "model", None),
+        "wB": P(None, None, None, None),
+        "wC": P(None, None, None, None),
+        "wdt": P(None, None, None, "model"),
+        "bdt": P(None, None, "model"),
+        "A_log": P(None, None, "model"),
+        "D": P(None, None, "model"),
+        "conv_x": P(None, None, None, "model", None),
+        "conv_B": P(None, None, None, None),
+        "conv_C": P(None, None, None, None),
+        "norm": P(None, None, "model", None),
+        "wo": P(None, None, "model", None, None),
+    }
+    return _assemble_specs(cfg, mamba)
+
+
+def _assemble_specs(cfg: ArchConfig, mamba):
+    moe_sp = {
+        "router": P(None, None, None, None),
+        "we_g": P(None, None, None, None, "model"),
+        "we_u": P(None, None, None, None, "model"),
+        "we_d": P(None, None, None, "model", None),
+    }
+    return {
+        "emb": P("model", None),
+        "ln_f": P(None),
+        "head": P("model", None),
+        "blocks": {
+            "mamba": mamba,
+            "mamba_ln": P(None, None, None),
+            "attn": {"wq": P(None, None, None, None, "model"),
+                     "wk": P(None, None, None, "model"),
+                     "wv": P(None, None, None, "model"),
+                     "wo": P(None, None, None, "model", None)},
+            "attn_ln": P(None, None),
+            "ffn": {"wg": P(None, None, None, "model"),
+                    "wu": P(None, None, None, "model"),
+                    "wd": P(None, None, "model", None)},
+            "ffn_ln": P(None, None, None),
+            "moe": moe_sp,
+            "moe_ln": P(None, None, None),
+        },
+    }
+
+
+def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    hp = cfg.hsadmm
+    d_in, H, hd, N = SSM.dims(cfg)
+    rules = []
+    if "ssm_heads" in cfg.prune_targets:
+        # balanced (TP-sharded) head rule when H divides the model axis
+        # (full config: H=128); fall back to a global rule for smoke dims
+        sh = MODEL_AXIS_SIZE if H % MODEL_AXIS_SIZE == 0 else 1
+        keep = keep_count(H, hp.keep_rate, MODEL_AXIS_SIZE if sh > 1 else 4)
+        rules.append(GroupRule(
+            "ssm_heads",
+            (LeafAxis("blocks/mamba/wz", 3), LeafAxis("blocks/mamba/wx", 3),
+             LeafAxis("blocks/mamba/wdt", 3), LeafAxis("blocks/mamba/bdt", 2),
+             LeafAxis("blocks/mamba/A_log", 2), LeafAxis("blocks/mamba/D", 2),
+             LeafAxis("blocks/mamba/conv_x", 3),
+             LeafAxis("blocks/mamba/norm", 2),
+             LeafAxis("blocks/mamba/wo", 2)),
+            groups=H, keep=keep, stack_ndims=2, shards=sh))
+    if "ffn" in cfg.prune_targets:
+        keep = keep_count(cfg.d_ff, hp.keep_rate, MODEL_AXIS_SIZE)
+        rules.append(GroupRule(
+            "ffn",
+            (LeafAxis("blocks/ffn/wg", 3), LeafAxis("blocks/ffn/wu", 3),
+             LeafAxis("blocks/ffn/wd", 2)),
+            groups=cfg.d_ff, keep=keep, stack_ndims=2,
+            shards=MODEL_AXIS_SIZE))
+    if "moe_ffn" in cfg.prune_targets:
+        fe = cfg.d_expert_eff
+        keep = keep_count(fe, hp.keep_rate, MODEL_AXIS_SIZE)
+        rules.append(GroupRule(
+            "moe_ffn",
+            (LeafAxis("blocks/moe/we_g", 4), LeafAxis("blocks/moe/we_u", 4),
+             LeafAxis("blocks/moe/we_d", 3)),
+            groups=fe, keep=keep, stack_ndims=3, shards=MODEL_AXIS_SIZE))
+    if "heads" in cfg.prune_targets:
+        keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
+        rules.append(GroupRule(
+            "heads",
+            (LeafAxis("blocks/attn/wq", 2), LeafAxis("blocks/attn/wk", 2),
+             LeafAxis("blocks/attn/wv", 2), LeafAxis("blocks/attn/wo", 1)),
+            groups=cfg.n_kv_heads, keep=keep, stack_ndims=1))
+    return SparsityPlan(tuple(rules))
+
+
+def cache_specs(cfg: ArchConfig, B: int, S: int, data_axes) -> dict:
+    import math
+    dsz = math.prod(s for _, s in data_axes)
+    names = tuple(n for n, _ in data_axes)
+    if B % dsz == 0 and B >= dsz:
+        bn, sn = names, None
+    else:
+        bn, sn = None, names
+    return {
+        "ssm": P(None, None, bn, None, None, "model"),
+        "conv_x": P(None, None, bn, None, None, "model"),
+        "conv_B": P(None, None, bn, None, None),
+        "conv_C": P(None, None, bn, None, None),
+        "k": P(None, bn, sn, None, "model"),
+        "v": P(None, bn, sn, None, "model"),
+        "len": P(),
+    }
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(init, cfg),
+        train_loss=functools.partial(train_loss, cfg),
+        param_specs=param_specs(cfg),
+        plan=sparsity_plan(cfg),
+        stack_map=(("blocks/mamba", 2), ("blocks/mamba_ln", 2),
+                   ("blocks/ffn", 2), ("blocks/ffn_ln", 2),
+                   ("blocks/moe", 2), ("blocks/moe_ln", 2),
+                   ("blocks", 1)),
+        prefill=functools.partial(step, cfg),
+        decode=functools.partial(step, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+    )

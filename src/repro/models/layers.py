@@ -1,0 +1,356 @@
+"""Shared neural-net layers (pure JAX, functional, dict params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; attention projections keep an
+    explicit head axis (d, H, hd) so head-structured pruning / TP sharding
+    address a single axis (DESIGN.md §5),
+  * attention uses chunked online-softmax (flash-style) so memory is
+    O(B*T*chunk), never O(T^2) — required to even *lower* the 32k/500k
+    shapes,
+  * norms/softmax accumulate in f32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# Trace-time activation-layout policy.  ``BATCH_AXIS`` anchors the batch
+# dim of (B, T, d) activations (set to "data" by the Engine for
+# pod-granularity archs whose per-worker batch is synchronously
+# data-parallel; None otherwise — chip-granularity batches are worker-local
+# under vmap and must NOT be constrained).
+BATCH_AXIS = [None]
+
+
+def set_batch_axis(axis):
+    BATCH_AXIS[0] = axis
+
+
+def constrain_seq(x):
+    """Sequence-parallel storage constraint: shard the time axis of a
+    (B, T, d) activation over the `model` axis when an ambient mesh with
+    that axis is set (Engine/dryrun lower under jax.set_mesh).  Applied at
+    scan-over-layers boundaries so remat residuals are stored SHARDED
+    (16x less HBM) and gathered transiently inside attention — Megatron
+    sequence parallelism realized through GSPMD.  No-op otherwise."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return x
+    size = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    if x.ndim < 2 or x.shape[-2] % size != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[-2] = "model"
+    if BATCH_AXIS[0] and x.ndim >= 3:
+        bsz = dict(zip(mesh.axis_names, mesh.axis_sizes)).get(BATCH_AXIS[0], 1)
+        if x.shape[-3] % bsz == 0:
+            spec[-3] = BATCH_AXIS[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta=10000.0):
+    """Apply RoPE to (..., T, H*, hd) given positions (..., T).
+
+    Interleaved (GPT-J-style) pairing: rotation pairs (2i, 2i+1) are
+    *adjacent*, so a head_dim sharded over the TP axis keeps every pair on
+    one shard (the rotate-half layout would split pairs across devices —
+    DESIGN.md §2 hardware-adaptation note).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    nhead = x.ndim - positions.ndim - 1  # broadcast dims for head axes
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, half)
+    ang = ang.reshape(ang.shape[:-1] + (1,) * nhead + (half,))
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    xp = x.reshape(x.shape[:-1] + (half, 2))
+    x1, x2 = xp[..., 0], xp[..., 1]
+    y = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(n, target):
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q, k, v, *, causal, q_chunk=512, k_chunk=512,
+                      kv_len=None, q_offset=None):
+    """q: (B,T,KV,G,hd), k/v: (B,S,KV,hd).  Returns (B,T,KV,G,hd).
+
+    Flash-style two-pass chunked attention with *differentiation-friendly*
+    memory behaviour (DESIGN.md §8):
+      pass 1 (stop-gradient) computes the exact row max m via a running-max
+             scan — m is a softmax stabilizer, safe to treat as constant;
+      pass 2 accumulates A = sum_s exp(s-m) v and l = sum_s exp(s-m) with a
+             purely *additive* scan carry, whose body is jax.checkpoint'ed:
+             scan-transpose then needs no per-iteration carry chain and the
+             backward pass recomputes each (qc,kc) score block — O(chunk^2)
+             live memory instead of O(T*S) (probe-validated).
+    The (qc,kc) block structure maps 1:1 onto the Pallas TPU kernel tiling.
+
+    ``kv_len`` masks a partially filled cache (decode).  Causal: query at
+    absolute position q_offset+i attends to kv positions <= q_offset+i
+    (q_offset defaults to S-T, the no-cache suffix alignment).
+    """
+    B, T, KV, G, hd = q.shape
+    S = k.shape[1]
+    qc = _pick_chunk(T, q_chunk)
+    kc = _pick_chunk(S, k_chunk)
+    nq, nk = T // qc, S // kc
+    scale = 1.0 / math.sqrt(hd)
+    off = (S - T) if q_offset is None else q_offset  # causal offset
+
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, KV, G, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, KV, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, KV, hd), 1, 0)
+
+    def scores(qblk, kblk, qpos, kpos):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        keep = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+        if causal:
+            keep = qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            keep = jnp.logical_and(keep, (kpos < kv_len)[None, :])
+        return jnp.where(keep[None, None, None], s, NEG_INF)
+
+    def q_body(_, qi_qc):
+        qi, qblk = qi_qc
+        qpos = qi * qc + jnp.arange(qc) + off
+
+        # pass 1: exact row max (stop-gradient)
+        def max_body(m, ki_kv):
+            ki, kblk = ki_kv
+            s = scores(jax.lax.stop_gradient(qblk),
+                       jax.lax.stop_gradient(kblk),
+                       qpos, ki * kc + jnp.arange(kc))
+            return jnp.maximum(m, s.max(axis=-1)), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        m, _ = jax.lax.scan(jax.checkpoint(max_body), m0,
+                            (jnp.arange(nk), kr))
+        m = jax.lax.stop_gradient(jnp.maximum(m, -1e28))  # all-masked rows
+
+        # pass 2: additive accumulation (linear carry, remat'd body)
+        def acc_body(carry, ki_kv):
+            A, l = carry
+            ki, kblk, vblk = ki_kv
+            s = scores(qblk, kblk, qpos, ki * kc + jnp.arange(kc))
+            p = jnp.exp(s - m[..., None])
+            A = A + jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype),
+                               vblk, preferred_element_type=jnp.float32)
+            return (A, l + p.sum(axis=-1)), None
+
+        A0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        (A, l), _ = jax.lax.scan(jax.checkpoint(acc_body), (A0, l0),
+                                 (jnp.arange(nk), kr, vr))
+        out = A / jnp.maximum(l[..., None], 1e-30)
+        # cast before stacking: the q-scan's ys buffer is a full-layer
+        # activation — keeping it f32 doubles peak HBM
+        return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_body, None, (jnp.arange(nq), qr))
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, T, KV, G, hd)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA, optional cross-attention)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d, n_heads, n_kv, hd, qkv_bias=False,
+                   dtype=jnp.float32, kv_d=None):
+    """GQA attention params with an *explicit group axis*: wq is
+    (d, KV, G, hd) with G = n_heads // n_kv, so head-structured pruning
+    removes whole GQA groups (query heads + their kv head together) along a
+    single axis — the LM analogue of conv-filter slicing (DESIGN.md §5)."""
+    ks = jax.random.split(key, 4)
+    kv_d = kv_d or d
+    G = n_heads // n_kv
+    p = {
+        "wq": dense_init(ks[0], (d, n_kv, G, hd), d, dtype),
+        "wk": dense_init(ks[1], (kv_d, n_kv, hd), kv_d, dtype),
+        "wv": dense_init(ks[2], (kv_d, n_kv, hd), kv_d, dtype),
+        "wo": dense_init(ks[3], (n_kv, G, hd, d), n_heads * hd, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_kv, G, hd), dtype)
+        p["bk"] = jnp.zeros((n_kv, hd), dtype)
+        p["bv"] = jnp.zeros((n_kv, hd), dtype)
+    return p
+
+
+def qkv_proj(p, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("btd,dkgh->btkgh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", kv_x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attention(p, x, *, positions=None, causal=True, rope_theta=None,
+              kv_x=None, kv_positions=None, cache=None, kv_len=None,
+              q_chunk=512, k_chunk=512):
+    """Full GQA attention block.  Returns (out, new_cache).
+
+    cache: optional dict {k:(B,S,KV,hd), v:..., len:int32} for decoding —
+    new k/v are written at position ``len`` (supports multi-token appends).
+    """
+    B, T, _ = x.shape
+    q, k, v = qkv_proj(p, x, kv_x)   # q: (B,T,KV,G,hd), k/v: (B,S,KV,hd)
+    if rope_theta is not None:
+        qpos = positions
+        kpos = kv_positions if kv_positions is not None else positions
+        q = rope(q, qpos, rope_theta)
+        k = rope(k, kpos, rope_theta)
+    if cache is not None:
+        k = _cache_update(cache["k"], k, cache["len"])
+        v = _cache_update(cache["v"], v, cache["len"])
+        new_cache = {"k": k, "v": v, "len": cache["len"] + T}
+        kv_len = cache["len"] + T
+    else:
+        new_cache = None
+    q_offset = cache["len"] if cache is not None else None
+    out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            k_chunk=k_chunk, kv_len=kv_len,
+                            q_offset=q_offset)
+    return jnp.einsum("btkgh,kghd->btd", out, p["wo"]), new_cache
+
+
+def _cache_update(buf, new, start):
+    """Write (B,T,KV,hd) at time offset `start` of (B,S,KV,hd)."""
+    return jax.lax.dynamic_update_slice(
+        buf, new.astype(buf.dtype), (0, start, 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d, f, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {"wg": dense_init(ks[0], (d, f), d, dtype),
+            "wu": dense_init(ks[1], (d, f), d, dtype),
+            "wd": dense_init(ks[2], (f, d), f, dtype)}
+
+
+def swiglu(p, x):
+    g = jnp.einsum("btd,df->btf", x, p["wg"])
+    u = jnp.einsum("btd,df->btf", x, p["wu"])
+    return jnp.einsum("btf,fd->btd", jax.nn.silu(g) * u, p["wd"])
+
+
+def init_gelu_mlp(key, d, f, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {"w1": dense_init(ks[0], (d, f), d, dtype),
+            "b1": jnp.zeros((f,), dtype),
+            "w2": dense_init(ks[1], (f, d), f, dtype),
+            "b2": jnp.zeros((d,), dtype)}
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, p["w1"]) + p["b1"])
+    return jnp.einsum("btf,fd->btd", h, p["w2"]) + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / LM head / losses
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def chunked_xent(h, emb_out, targets, valid=None, chunk=512):
+    """Next-token cross-entropy without materializing (B,T,V) logits.
+
+    h: (B,T,d) hidden states, emb_out: (V,d) tied/untied output embedding,
+    targets: (B,T) int32.  Scans over T chunks; each chunk's logits are
+    (B,chunk,V) — sharded over vocab under TP, rematerialized on backward.
+    """
+    B, T, d = h.shape
+    c = _pick_chunk(T, chunk)
+    n = T // c
+    hs = jnp.moveaxis(h.reshape(B, n, c, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, c), 1, 0)
+    vs = None if valid is None else jnp.moveaxis(valid.reshape(B, n, c), 1, 0)
+
+    def body(carry, xs):
+        if valid is None:
+            hc, tc = xs
+            vc = jnp.ones(tc.shape, jnp.float32)
+        else:
+            hc, tc, vc = xs
+        logits = jnp.einsum("btd,vd->btv", hc, emb_out,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - tl) * vc)
+        return (carry[0] + loss, carry[1] + jnp.sum(vc)), None
+
+    xs = (hs, ts) if valid is None else (hs, ts, vs)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def causal_targets(tokens):
+    """(tokens[:, :-1] predicts tokens[:, 1:]) folded to same length."""
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    valid = jnp.concatenate(
+        [jnp.ones(tokens[:, 1:].shape, jnp.float32),
+         jnp.zeros(tokens[:, :1].shape, jnp.float32)], axis=1)
+    return tgt, valid

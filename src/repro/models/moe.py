@@ -1,0 +1,269 @@
+"""Mixture-of-Experts LM (qwen2-moe / granite-moe families).
+
+Routing is the XLA-static sort-based dispatch: tokens' (token, expert) pairs
+are argsorted by expert, ranked within expert, and scattered into a static
+(E, capacity, d) buffer; expert FFNs run as one batched GEMM; results gather
+back weighted by router probs.  Over-capacity pairs drop (standard capacity
+semantics).  Expert hidden dims are TP-sharded; dispatch is worker-local so
+MoE composes with the ADMM worker layout with zero extra collectives.
+
+Sparsity target ``moe_ffn`` prunes per-expert hidden units: groups live per
+(layer, expert) — stack_ndims=2 (DESIGN.md §5).  Shared experts are pruned
+via the dense ``ffn`` rule.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from .api import ModelBundle, pad_to
+from . import layers as L
+from . import transformer as TF
+
+MODEL_AXIS_SIZE = 16
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_moe_ffn(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 5)
+    d, E, fe = cfg.d_model, cfg.n_experts, cfg.d_expert_eff
+    p = {
+        "router": L.dense_init(ks[0], (d, E), d, _dt(cfg)),
+        "we_g": L.dense_init(ks[1], (E, d, fe), d, _dt(cfg)),
+        "we_u": L.dense_init(ks[2], (E, d, fe), d, _dt(cfg)),
+        "we_d": L.dense_init(ks[3], (E, fe, d), fe, _dt(cfg)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.d_expert_eff
+        p["shared"] = L.init_swiglu(ks[4], d, fs, _dt(cfg))
+    return p
+
+
+def moe_ffn(cfg: ArchConfig, p, x, capacity_factor: float = 1.25):
+    """x: (B,T,d) -> (B,T,d), plus scalar aux load-balancing loss.
+
+    ``cfg.moe_dispatch_groups`` > 1 partitions the flattened token stream
+    into contiguous groups, each dispatched independently (capacity is per
+    group).  Pod-granularity archs set it to the data-axis size so the
+    sort/scatter/expert-GEMM buffers stay batch-sharded — a global sort over
+    a data-sharded token set would otherwise gather every token to every
+    device (measured 15GiB/device buffers at jamba scale, DESIGN.md §8).
+    """
+    B, T, d = x.shape
+    G = max(cfg.moe_dispatch_groups, 1)
+    while (B * T) % G:     # decode steps have few tokens: clamp to a divisor
+        G -= 1
+    if G > 1:
+        # Sequential scan over token groups: per-iteration dispatch buffers
+        # are 1/G of the full-batch ones, bounding live memory regardless of
+        # how GSPMD propagates sharding through sort/scatter (a vmap'd
+        # grouped dispatch replicated its buffers; measured 15GiB/device per
+        # buffer at jamba scale).  Per-group expert GEMMs remain large
+        # enough to saturate the MXU on the TPU target.
+        xg = x.reshape(G, (B * T) // G, 1, d)
+        cfg1 = cfg.replace(moe_dispatch_groups=1)
+
+        def body(aux, xx):
+            out, a = moe_ffn(cfg1, p, xx, capacity_factor)
+            return aux + a, out
+
+        aux, out = jax.lax.scan(jax.checkpoint(body),
+                                jnp.zeros((), jnp.float32), xg)
+        return out.reshape(B, T, d), aux / G
+    E, k = cfg.n_experts, cfg.moe_top_k
+    N = B * T
+    xf = x.reshape(N, d)
+    logits = jnp.einsum("nd,de->ne", xf, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                      # (N, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(N * k / E * capacity_factor / 8)) * 8
+    cap = min(cap, N)
+    e_flat = topi.reshape(-1)                                  # (N*k,)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    offsets = jnp.cumsum(counts) - counts                      # exclusive
+    rank = jnp.arange(N * k) - offsets[e_sorted]
+    keep = rank < cap
+    slot_sorted = jnp.where(keep, e_sorted * cap + rank, E * cap)
+    tok_sorted = order // k
+    # scatter-ADD, not set: slots are unique (overflow collisions land on
+    # the dropped sentinel row), and add has a linear transpose (a gather) —
+    # the set-VJP builds full-rank u32 write masks (measured 80GiB/device)
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot_sorted].add(
+        xf[tok_sorted], mode="drop")
+    h = buf[:E * cap].reshape(E, cap, d)
+
+    g = jnp.einsum("ecd,edf->ecf", h, p["we_g"])
+    u = jnp.einsum("ecd,edf->ecf", h, p["we_u"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["we_d"])
+
+    y_flat = jnp.concatenate([y.reshape(E * cap, d),
+                              jnp.zeros((1, d), y.dtype)], axis=0)
+    slot_pair = jnp.zeros((N * k,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32))
+    y_pair = y_flat[slot_pair].reshape(N, k, d)
+    out = jnp.einsum("nkd,nk->nd", y_pair, topv.astype(y_pair.dtype))
+
+    if "shared" in p:
+        out = out + L.swiglu(p["shared"], x).reshape(N, d)
+
+    # Switch-style load-balance aux loss
+    assign = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), 0)
+    aux = E * jnp.sum(assign * jnp.mean(probs, axis=0))
+    return out.reshape(B, T, d), aux
+
+
+def init_block(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 2)
+    hd = cfg.kv_head_dim
+    return {
+        "ln1": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "attn": L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, hd, cfg.qkv_bias, _dt(cfg)),
+        "ln2": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "moe": init_moe_ffn(cfg, ks[1]),
+    }
+
+
+def init(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 3)
+    vp = pad_to(cfg.vocab, MODEL_AXIS_SIZE)
+    blocks = jax.vmap(lambda k: init_block(cfg, k))(
+        jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "emb": L.dense_init(ks[1], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "head": L.dense_init(ks[2], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+    }
+
+
+def block_apply(cfg, h, bp, positions, cache=None, q_chunk=512, k_chunk=512):
+    a, new_cache = L.attention(
+        bp["attn"], L.rms_norm(h, bp["ln1"], cfg.norm_eps),
+        positions=positions, causal=True, rope_theta=cfg.rope_theta,
+        cache=cache, q_chunk=q_chunk, k_chunk=k_chunk)
+    h = h + a
+    m, aux = moe_ffn(cfg, bp["moe"], L.rms_norm(h, bp["ln2"], cfg.norm_eps))
+    return h + m, new_cache, aux
+
+
+def train_loss(cfg: ArchConfig, params, batch, aux_weight=0.01):
+    tokens = batch["tokens"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(carry, bp):
+        h, aux = carry
+        h = L.constrain_seq(h)
+        h, _, a = block_apply(cfg, h, bp, positions)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    tgt, valid = L.causal_targets(tokens)
+    return L.chunked_xent(h, params["head"], tgt, valid) \
+        + aux_weight * aux / cfg.n_layers
+
+
+def step(cfg: ArchConfig, params, tokens, cache, q_chunk=512, k_chunk=512):
+    B, T = tokens.shape
+    start = cache["len"]
+    positions = start + jnp.broadcast_to(jnp.arange(T), (B, T))
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(h, xs):
+        bp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "len": start}
+        h, nc, _ = block_apply(cfg, h, bp, positions, cache=lcache,
+                               q_chunk=q_chunk, k_chunk=k_chunk)
+        return h, (nc["k"], nc["v"])
+
+    h, (nk, nv) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"k": nk, "v": nv, "len": start + T}
+
+
+def param_specs(cfg: ArchConfig):
+    sp = TF.param_specs(cfg)
+    blk = sp["blocks"]
+    del blk["mlp"]
+    moe = {
+        "router": P(None, None, None),
+        "we_g": P(None, None, None, "model"),
+        "we_u": P(None, None, None, "model"),
+        "we_d": P(None, None, "model", None),
+    }
+    if cfg.n_shared_experts:
+        moe["shared"] = {"wg": P(None, None, "model"),
+                         "wu": P(None, None, "model"),
+                         "wd": P(None, "model", None)}
+    blk["moe"] = moe
+    return sp
+
+
+def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    hp = cfg.hsadmm
+    fe = cfg.d_expert_eff
+    rules = []
+    if "moe_ffn" in cfg.prune_targets:
+        keep = keep_count(fe, hp.keep_rate, MODEL_AXIS_SIZE)
+        rules.append(GroupRule(
+            "moe_ffn",
+            (LeafAxis("blocks/moe/we_g", 3), LeafAxis("blocks/moe/we_u", 3),
+             LeafAxis("blocks/moe/we_d", 2)),
+            groups=fe, keep=keep, stack_ndims=2, shards=MODEL_AXIS_SIZE))
+    if "ffn" in cfg.prune_targets and cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        keep = keep_count(fs, hp.keep_rate, MODEL_AXIS_SIZE)
+        rules.append(GroupRule(
+            "ffn",
+            (LeafAxis("blocks/moe/shared/wg", 2),
+             LeafAxis("blocks/moe/shared/wu", 2),
+             LeafAxis("blocks/moe/shared/wd", 1)),
+            groups=fs, keep=keep, stack_ndims=1, shards=MODEL_AXIS_SIZE))
+    if "heads" in cfg.prune_targets:
+        keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
+        leaves = [LeafAxis("blocks/attn/wq", 2), LeafAxis("blocks/attn/wk", 2),
+                  LeafAxis("blocks/attn/wv", 2), LeafAxis("blocks/attn/wo", 1)]
+        if cfg.qkv_bias:
+            leaves += [LeafAxis("blocks/attn/bq", 1),
+                       LeafAxis("blocks/attn/bk", 1),
+                       LeafAxis("blocks/attn/bv", 1)]
+        rules.append(GroupRule("heads", tuple(leaves),
+                               groups=cfg.n_kv_heads, keep=keep,
+                               stack_ndims=1))
+    return SparsityPlan(tuple(rules))
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(init, cfg),
+        train_loss=functools.partial(train_loss, cfg),
+        param_specs=param_specs(cfg),
+        plan=sparsity_plan(cfg),
+        stack_map=(("blocks", 1),),
+        prefill=functools.partial(step, cfg),
+        decode=functools.partial(step, cfg),
+        init_cache=functools.partial(TF.init_cache, cfg),
+        cache_specs=functools.partial(TF.cache_specs, cfg),
+    )

@@ -1,0 +1,212 @@
+"""Decoder-only GQA transformer LM (tinyllama / qwen2.5 / minitron /
+deepseek-coder families) with scan-over-layers, remat, chunked-CE loss and a
+stacked KV cache for serving.
+
+Structured-sparsity targets (DESIGN.md §5):
+  * ``ffn``   — FFN hidden units (rows of wg/wu, cols of wd), balanced over
+                the TP shards of the hidden axis,
+  * ``heads`` — whole GQA groups (kv head + its G query heads), enabled for
+                archs with enough kv heads (cfg.prune_targets).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from .api import ModelBundle, pad_to, specs_like
+from . import layers as L
+
+MODEL_AXIS_SIZE = 16  # TP width of the production mesh
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_block(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 4)
+    hd = cfg.kv_head_dim
+    return {
+        "ln1": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "attn": L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, hd, cfg.qkv_bias, _dt(cfg)),
+        "ln2": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "mlp": L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, _dt(cfg)),
+    }
+
+
+def init(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 4)
+    vp = pad_to(cfg.vocab, MODEL_AXIS_SIZE)
+    blocks = jax.vmap(lambda k: init_block(cfg, k))(
+        jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "emb": L.dense_init(ks[1], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "head": L.dense_init(ks[2], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+    }
+
+
+def block_apply(cfg: ArchConfig, h, bp, positions, cache=None, kv_len=None,
+                q_chunk=512, k_chunk=512):
+    a, new_cache = L.attention(
+        bp["attn"], L.rms_norm(h, bp["ln1"], cfg.norm_eps),
+        positions=positions, causal=True, rope_theta=cfg.rope_theta,
+        cache=cache, kv_len=kv_len, q_chunk=q_chunk, k_chunk=k_chunk)
+    h = h + a
+    h = h + L.swiglu(bp["mlp"], L.rms_norm(h, bp["ln2"], cfg.norm_eps))
+    return h, new_cache
+
+
+def forward(cfg: ArchConfig, params, tokens, positions):
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(h, bp):
+        h = L.constrain_seq(h)
+        return block_apply(cfg, h, bp, positions)[0], None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+
+
+def train_loss(cfg: ArchConfig, params, batch):
+    tokens = batch["tokens"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    h = forward(cfg, params, tokens, positions)
+    tgt, valid = L.causal_targets(tokens)
+    return L.chunked_xent(h, params["head"], tgt, valid)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int):
+    hd = cfg.kv_head_dim
+    shape = (cfg.n_layers, B, S, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, _dt(cfg)),
+            "v": jnp.zeros(shape, _dt(cfg)),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def step(cfg: ArchConfig, params, tokens, cache, q_chunk=512, k_chunk=512):
+    """Run T tokens (prefill: T=S and empty cache; decode: T=1, full cache).
+    Returns (last-position logits, new cache)."""
+    B, T = tokens.shape
+    start = cache["len"]
+    positions = start + jnp.broadcast_to(jnp.arange(T), (B, T))
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(h, xs):
+        bp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "len": start}
+        h, nc = block_apply(cfg, h, bp, positions, cache=lcache,
+                            q_chunk=q_chunk, k_chunk=k_chunk)
+        return h, (nc["k"], nc["v"])
+
+    h, (nk, nv) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"k": nk, "v": nv, "len": start + T}
+
+
+# ---------------------------------------------------------------------------
+# sharding / sparsity metadata
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ArchConfig):
+    """TP layout: head_dim + FFN hidden + vocab over the `model` axis.
+
+    head_dim (not the head-count axis) is sharded so that head pruning and
+    the GQA group structure never collide with the TP layout (DESIGN.md §5).
+    """
+    sp = {
+        "emb": P("model", None),
+        "ln_f": P(None),
+        "head": P("model", None),
+        "blocks": {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "attn": {
+                "wq": P(None, None, None, None, "model"),
+                "wk": P(None, None, None, "model"),
+                "wv": P(None, None, None, "model"),
+                "wo": P(None, None, None, "model", None),
+            },
+            "mlp": {"wg": P(None, None, "model"),
+                    "wu": P(None, None, "model"),
+                    "wd": P(None, "model", None)},
+        },
+    }
+    if cfg.qkv_bias:
+        sp["blocks"]["attn"]["bq"] = P(None, None, None, "model")
+        sp["blocks"]["attn"]["bk"] = P(None, None, "model")
+        sp["blocks"]["attn"]["bv"] = P(None, None, "model")
+    return sp
+
+
+def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    hp = cfg.hsadmm
+    rules = []
+    if "ffn" in cfg.prune_targets:
+        keep = keep_count(cfg.d_ff, hp.keep_rate, MODEL_AXIS_SIZE)
+        rules.append(GroupRule(
+            "ffn",
+            (LeafAxis("blocks/mlp/wg", 2), LeafAxis("blocks/mlp/wu", 2),
+             LeafAxis("blocks/mlp/wd", 1)),
+            groups=cfg.d_ff, keep=keep, stack_ndims=1,
+            shards=MODEL_AXIS_SIZE))
+    if "heads" in cfg.prune_targets:
+        keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
+        leaves = [LeafAxis("blocks/attn/wq", 2),
+                  LeafAxis("blocks/attn/wk", 2),
+                  LeafAxis("blocks/attn/wv", 2),
+                  LeafAxis("blocks/attn/wo", 1)]
+        if cfg.qkv_bias:
+            leaves += [LeafAxis("blocks/attn/bq", 1),
+                       LeafAxis("blocks/attn/bk", 1),
+                       LeafAxis("blocks/attn/bv", 1)]
+        rules.append(GroupRule("heads", tuple(leaves),
+                               groups=cfg.n_kv_heads, keep=keep,
+                               stack_ndims=1))
+    return SparsityPlan(tuple(rules))
+
+
+def cache_specs(cfg: ArchConfig, B: int, S: int, data_axes) -> dict:
+    """KV-cache sharding: batch over the data axes when divisible, else the
+    sequence dim; head_dim over `model`."""
+    import math
+    dsz = math.prod(s for _, s in data_axes)
+    names = tuple(n for n, _ in data_axes)
+    if B % dsz == 0 and B >= dsz:
+        kv = P(None, names, None, None, "model")
+    else:
+        kv = P(None, None, names, None, "model")
+    return {"k": kv, "v": kv, "len": P()}
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(init, cfg),
+        train_loss=functools.partial(train_loss, cfg),
+        param_specs=param_specs(cfg),
+        plan=sparsity_plan(cfg),
+        stack_map=(("blocks", 1),),
+        prefill=functools.partial(step, cfg),
+        decode=functools.partial(step, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+    )

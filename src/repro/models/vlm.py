@@ -1,0 +1,259 @@
+"""Llama-3.2-Vision-style VLM backbone: a text decoder with gated
+cross-attention layers every ``cross_period``-th position.
+
+Per the assignment, the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, img_tokens, d_model).  100 layers = 20
+groups of (4 self-attn layers + 1 gated cross-attn layer), scanned over
+groups with stacked params.
+
+Serving: cross K/V are computed once at prefill and reused every decode
+step; self-attn uses the standard KV cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from .api import ModelBundle, pad_to
+from . import layers as L
+from . import transformer as TF
+
+MODEL_AXIS_SIZE = 16
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _groups(cfg):
+    period = cfg.cross_period
+    assert cfg.n_layers % period == 0
+    return cfg.n_layers // period, period
+
+
+def init_group(cfg: ArchConfig, key):
+    _, period = _groups(cfg)
+    ns = period - 1
+    ks = jax.random.split(key, 3)
+    self_blocks = jax.vmap(lambda k: TF.init_block(cfg, k))(
+        jax.random.split(ks[0], ns))
+    d = cfg.d_model
+    return {
+        "self": self_blocks,
+        "xln": jnp.ones((d,), _dt(cfg)),
+        "xattn": L.init_attention(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.kv_head_dim, False, _dt(cfg)),
+        "xgate": jnp.zeros((), _dt(cfg)),
+        "xffn_ln": jnp.ones((d,), _dt(cfg)),
+        "xffn": L.init_swiglu(ks[2], d, cfg.d_ff, _dt(cfg)),
+        "xffn_gate": jnp.zeros((), _dt(cfg)),
+    }
+
+
+def init(cfg: ArchConfig, key):
+    G, _ = _groups(cfg)
+    ks = jax.random.split(key, 3)
+    vp = pad_to(cfg.vocab, MODEL_AXIS_SIZE)
+    blocks = jax.vmap(lambda k: init_group(cfg, k))(jax.random.split(ks[0], G))
+    return {
+        "emb": L.dense_init(ks[1], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), _dt(cfg)),
+        "head": L.dense_init(ks[2], (vp, cfg.d_model), cfg.d_model, _dt(cfg)),
+    }
+
+
+def group_apply(cfg, h, bp, positions, img=None, state=None, cross_kv=None,
+                q_chunk=512, k_chunk=512):
+    _, period = _groups(cfg)
+    ns = period - 1
+    new_k, new_v = [], []
+    for i in range(ns):
+        sp = jax.tree.map(lambda x: x[i], bp["self"])
+        cache = None
+        if state is not None:
+            cache = {"k": state["k"][i], "v": state["v"][i],
+                     "len": state["len"]}
+        h, nc = TF.block_apply(cfg, h, sp, positions, cache=cache,
+                               q_chunk=q_chunk, k_chunk=k_chunk)
+        if state is not None:
+            new_k.append(nc["k"])
+            new_v.append(nc["v"])
+    # gated cross-attention on image tokens
+    xin = L.rms_norm(h, bp["xln"], cfg.norm_eps)
+    if cross_kv is not None:
+        q, _, _ = L.qkv_proj(bp["xattn"], xin, xin)
+        out = L.chunked_attention(q, cross_kv[0], cross_kv[1], causal=False)
+        x = jnp.einsum("btkgh,kghd->btd", out, bp["xattn"]["wo"])
+    else:
+        x, _ = L.attention(bp["xattn"], xin, kv_x=img, causal=False)
+    h = h + jnp.tanh(bp["xgate"]).astype(h.dtype) * x
+    f = L.swiglu(bp["xffn"], L.rms_norm(h, bp["xffn_ln"], cfg.norm_eps))
+    h = h + jnp.tanh(bp["xffn_gate"]).astype(h.dtype) * f
+    if state is not None:
+        return h, (jnp.stack(new_k), jnp.stack(new_v))
+    return h, None
+
+
+def train_loss(cfg: ArchConfig, params, batch):
+    tokens, img = batch["tokens"], batch["img"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(h, bp):
+        h = L.constrain_seq(h)
+        h, _ = group_apply(cfg, h, bp, positions, img=img)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["blocks"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    tgt, valid = L.causal_targets(tokens)
+    return L.chunked_xent(h, params["head"], tgt, valid)
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int):
+    G, period = _groups(cfg)
+    hd, KV = cfg.kv_head_dim, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((G, period - 1, B, S, KV, hd), _dt(cfg)),
+        "v": jnp.zeros((G, period - 1, B, S, KV, hd), _dt(cfg)),
+        "xk": jnp.zeros((G, B, cfg.img_tokens, KV, hd), _dt(cfg)),
+        "xv": jnp.zeros((G, B, cfg.img_tokens, KV, hd), _dt(cfg)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, img=None, **kw):
+    def xkv(bp):
+        _, k, v = L.qkv_proj(bp["xattn"], img, img)
+        return k, v
+    xk, xv = jax.vmap(xkv)(params["blocks"])
+    cache = dict(cache, xk=xk.astype(cache["xk"].dtype),
+                 xv=xv.astype(cache["xv"].dtype))
+    return _step(cfg, params, tokens, cache, **kw)
+
+
+def decode(cfg: ArchConfig, params, tokens, cache, **kw):
+    return _step(cfg, params, tokens, cache, **kw)
+
+
+def _step(cfg, params, tokens, cache, q_chunk=512, k_chunk=512):
+    B, T = tokens.shape
+    start = cache["len"]
+    positions = start + jnp.broadcast_to(jnp.arange(T), (B, T))
+    h = L.embed_lookup(params["emb"], tokens)
+
+    def body(h, xs):
+        bp, ck, cv, xk, xv = xs
+        st = {"k": ck, "v": cv, "len": start}
+        h, (nk, nv) = group_apply(cfg, h, bp, positions, state=st,
+                                  cross_kv=(xk, xv), q_chunk=q_chunk,
+                                  k_chunk=k_chunk)
+        return h, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
+                                         cache["v"], cache["xk"],
+                                         cache["xv"]))
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"],
+                    "len": start + T}
+
+
+def param_specs(cfg: ArchConfig):
+    tf = TF.param_specs(cfg)["blocks"]
+    self_sp = {
+        "ln1": P(None, None, None), "ln2": P(None, None, None),
+        "attn": {k2: P(*((None,) + tuple(v)))
+                 for k2, v in tf["attn"].items()},
+        "mlp": {k2: P(*((None,) + tuple(v))) for k2, v in tf["mlp"].items()},
+    }
+    return {
+        "emb": P("model", None), "ln_f": P(None), "head": P("model", None),
+        "blocks": {
+            "self": self_sp,
+            "xln": P(None, None),
+            "xattn": {"wq": P(None, None, None, None, "model"),
+                      "wk": P(None, None, None, "model"),
+                      "wv": P(None, None, None, "model"),
+                      "wo": P(None, None, None, "model", None)},
+            "xgate": P(None),
+            "xffn_ln": P(None, None),
+            "xffn": {"wg": P(None, None, "model"),
+                     "wu": P(None, None, "model"),
+                     "wd": P(None, "model", None)},
+            "xffn_gate": P(None),
+        },
+    }
+
+
+def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    hp = cfg.hsadmm
+    rules = []
+    if "ffn" in cfg.prune_targets:
+        keep = keep_count(cfg.d_ff, hp.keep_rate, MODEL_AXIS_SIZE)
+        rules.append(GroupRule(
+            "ffn_self",
+            (LeafAxis("blocks/self/mlp/wg", 3),
+             LeafAxis("blocks/self/mlp/wu", 3),
+             LeafAxis("blocks/self/mlp/wd", 2)),
+            groups=cfg.d_ff, keep=keep, stack_ndims=2,
+            shards=MODEL_AXIS_SIZE))
+        rules.append(GroupRule(
+            "ffn_cross",
+            (LeafAxis("blocks/xffn/wg", 2), LeafAxis("blocks/xffn/wu", 2),
+             LeafAxis("blocks/xffn/wd", 1)),
+            groups=cfg.d_ff, keep=keep, stack_ndims=1,
+            shards=MODEL_AXIS_SIZE))
+    if "heads" in cfg.prune_targets:
+        keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
+        rules.append(GroupRule(
+            "heads_self",
+            (LeafAxis("blocks/self/attn/wq", 3),
+             LeafAxis("blocks/self/attn/wk", 3),
+             LeafAxis("blocks/self/attn/wv", 3),
+             LeafAxis("blocks/self/attn/wo", 2)),
+            groups=cfg.n_kv_heads, keep=keep, stack_ndims=2))
+        rules.append(GroupRule(
+            "heads_cross",
+            (LeafAxis("blocks/xattn/wq", 2), LeafAxis("blocks/xattn/wk", 2),
+             LeafAxis("blocks/xattn/wv", 2), LeafAxis("blocks/xattn/wo", 1)),
+            groups=cfg.n_kv_heads, keep=keep, stack_ndims=1))
+    return SparsityPlan(tuple(rules))
+
+
+def cache_specs(cfg: ArchConfig, B: int, S: int, data_axes) -> dict:
+    import math
+    dsz = math.prod(s for _, s in data_axes)
+    names = tuple(n for n, _ in data_axes)
+    bn = names if (B % dsz == 0 and B >= dsz) else None
+    sn = None if bn is not None else names
+    return {"k": P(None, None, bn, sn, None, "model"),
+            "v": P(None, None, bn, sn, None, "model"),
+            "xk": P(None, bn, None, None, "model"),
+            "xv": P(None, bn, None, None, "model"),
+            "len": P()}
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(init, cfg),
+        train_loss=functools.partial(train_loss, cfg),
+        param_specs=param_specs(cfg),
+        plan=sparsity_plan(cfg),
+        stack_map=(("blocks/self", 2), ("blocks", 1)),
+        prefill=functools.partial(prefill, cfg),
+        decode=functools.partial(decode, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        extra_inputs=(("img", lambda s: (cfg.img_tokens, cfg.d_model),
+                       jnp.dtype(cfg.param_dtype)),),
+    )

@@ -1,0 +1,8 @@
+from .sgd import sgd_init, sgd_update
+from .adamw import adamw_init, adamw_update
+from .schedule import cosine_schedule, constant_schedule
+from .topk_compression import topk_compress_state, topk_grad_exchange
+
+__all__ = ["sgd_init", "sgd_update", "adamw_init", "adamw_update",
+           "cosine_schedule", "constant_schedule", "topk_compress_state",
+           "topk_grad_exchange"]

@@ -1,0 +1,31 @@
+"""AdamW (decoupled weight decay), f32 moments regardless of param dtype."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    z = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt_state, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    t = opt_state["t"] + 1
+    tf = t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / (1 - b1 ** tf)
+        vh = v / (1 - b2 ** tf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    pick = lambda i: jax.tree.map(lambda tpl: tpl[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "t": t}

@@ -1,0 +1,17 @@
+"""LR schedules."""
+import jax.numpy as jnp
+
+
+def constant_schedule(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak, total_steps, warmup=0, floor=0.0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,24 @@
+"""SGD with momentum + weight decay (paper §5.1.5 baseline optimizer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return {"mom": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, opt_state, *, lr, momentum=0.9,
+               weight_decay=0.0):
+    def upd(p, g, m):
+        g = g + weight_decay * p if weight_decay else g
+        m = momentum * m + g
+        return (p - jnp.asarray(lr).astype(p.dtype) * m).astype(p.dtype), m
+
+    flat = jax.tree.map(upd, params, grads, opt_state["mom"])
+    new_p = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mom": new_m}

@@ -1,0 +1,114 @@
+"""Baseline trainers (paper §5.1.4): dense synchronous DDP and Top-K
+gradient compression — both expressed in the same leading-worker-dim layout
+so communication byte accounting is directly comparable to H-SADMM.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ShapeConfig
+from ..core.hsadmm import flatten, tree_map_leaves
+from ..data.pipeline import batches, prefetch
+from ..data.synthetic import make_stream
+from ..optim.topk_compression import topk_compress_state, topk_grad_exchange
+
+
+@dataclass
+class BaselineReport:
+    losses: list = field(default_factory=list)
+    comm_bytes_internode: list = field(default_factory=list)
+    wall_times: list = field(default_factory=list)
+
+
+def _param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def ddp_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
+              eta=1e-3, momentum=0.9, seed=0, log=None):
+    """Dense synchronous DDP: per-step gradient mean over all workers
+    (ring AllReduce semantics).  Inter-node bytes/step = full param size."""
+    cfg = bundle.cfg
+    key = jax.random.PRNGKey(seed)
+    p0 = bundle.init(key)
+    W = workers
+    params = tree_map_leaves(lambda _, x: jnp.broadcast_to(
+        x, (W,) + x.shape), p0)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    stream = make_stream(cfg, shape, W)
+    it = prefetch(batches(stream, bundle.extra_inputs, shape))
+
+    @jax.jit
+    def step(params, mom, batch):
+        losses, g = jax.vmap(jax.value_and_grad(bundle.train_loss))(
+            params, batch)
+        g = jax.tree.map(lambda x: jnp.broadcast_to(
+            x.mean(0, keepdims=True), x.shape), g)    # AllReduce mean
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(
+            lambda p, m: p - jnp.asarray(eta).astype(p.dtype) * m,
+            params, mom)
+        return params, mom, losses.mean()
+
+    rep = BaselineReport()
+    pbytes = _param_bytes(p0)
+    for s in range(steps):
+        t0 = time.time()
+        params, mom, loss = step(params, mom, next(it))
+        rep.losses.append(float(loss))
+        rep.comm_bytes_internode.append(pbytes)
+        rep.wall_times.append(time.time() - t0)
+        if log and s % 20 == 0:
+            log(f"[ddp] step={s} loss={float(loss):.4f}")
+    return jax.tree.map(lambda x: x[0], params), rep
+
+
+def topk_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
+               rate=0.01, eta=1e-3, momentum=0.9, seed=0, log=None):
+    """Top-K (rate=0.01 = top 1%, the paper's setting) with error feedback."""
+    cfg = bundle.cfg
+    key = jax.random.PRNGKey(seed)
+    p0 = bundle.init(key)
+    W = workers
+    params = tree_map_leaves(lambda _, x: jnp.broadcast_to(
+        x, (W,) + x.shape), p0)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    err = tree_map_leaves(lambda _, x: jnp.zeros((W,) + x.shape), p0)
+    stream = make_stream(cfg, shape, W)
+    it = prefetch(batches(stream, bundle.extra_inputs, shape))
+
+    @jax.jit
+    def step(params, mom, err, batch):
+        losses, g = jax.vmap(jax.value_and_grad(bundle.train_loss))(
+            params, batch)
+
+        def worker_fn(gw, ew):
+            s, ne, _ = topk_grad_exchange(gw, ew, rate)
+            return s, ne
+        sparse, err = jax.vmap(worker_fn)(g, err)
+        g = jax.tree.map(lambda x: jnp.broadcast_to(
+            x.mean(0, keepdims=True), x.shape), sparse)  # AllGather+sum
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(
+            lambda p, m: p - jnp.asarray(eta).astype(p.dtype) * m,
+            params, mom)
+        return params, mom, err, losses.mean()
+
+    rep = BaselineReport()
+    n_params = sum(x.size for x in jax.tree.leaves(p0))
+    # values + int32 indices, AllGather: every worker's payload traverses
+    # the fabric (the paper's Table 1 metadata-overhead criticism)
+    payload = int(n_params * rate) * 8 * W
+    for s in range(steps):
+        t0 = time.time()
+        params, mom, err, loss = step(params, mom, err, next(it))
+        rep.losses.append(float(loss))
+        rep.comm_bytes_internode.append(payload)
+        rep.wall_times.append(time.time() - t0)
+        if log and s % 20 == 0:
+            log(f"[topk] step={s} loss={float(loss):.4f}")
+    return jax.tree.map(lambda x: x[0], params), rep

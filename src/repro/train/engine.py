@@ -1,0 +1,295 @@
+"""Engine: binds a ModelBundle + mesh + H-SADMM core into sharded,
+donated, jitted step functions (DESIGN.md §3).
+
+Responsibilities:
+  * derive the consensus hierarchy from the mesh + arch granularity
+    (chip: device->virtual-node->pod->global; pod: pod->global),
+  * build NamedShardings for every H-SADMM state leaf (leading consensus
+    dims over pod/data axes, TP over model, ZeRO-style FSDP spill of
+    logically-replicated consensus state),
+  * jit local_step / consensus_step (dynamic + frozen variants) and the
+    serving steps with explicit in/out shardings and donation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ConsensusSpec, ShapeConfig
+from ..core.consensus import consensus_step
+from ..core.hsadmm import EngineSpec, init_state, local_step
+from ..models.api import ModelBundle
+
+
+def make_consensus_spec(cfg: ArchConfig, mesh: Mesh,
+                        node_size: int = None) -> ConsensusSpec:
+    """Map arch granularity onto the mesh (DESIGN.md §3.2).
+
+    chip: every data-rank is an ADMM worker; the data axis splits into
+          virtual nodes of ``node_size`` (paper's two-level hierarchy inside
+          a pod); the pod axis adds a third level (paper §4.1.5).
+    pod:  each pod is one worker (sync FSDP inside); consensus across pods
+          only, compact from the first boundary.
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data = axes.get("data", 1)
+    pods = axes.get("pod", 1)
+    g = cfg.consensus.granularity
+    node_size = node_size or cfg.consensus.node_size
+    if g == "chip":
+        ns = min(node_size, data)
+        levels = (ns,) + ((data // ns,) if data // ns > 1 else ()) \
+            + ((pods,) if pods > 1 else ())
+        if len(levels) == 1:
+            levels = levels + (1,)  # keep a node->global boundary
+        return ConsensusSpec(levels=levels, compact_from_level=1,
+                             granularity="chip", node_size=ns)
+    if g == "pod":
+        levels = (pods,) if pods > 1 else (1,)
+        return ConsensusSpec(levels=levels, compact_from_level=0,
+                             granularity="pod")
+    if g == "flat":   # paper §5.1.4 "PruneX (AR)" ablation: flat consensus
+        levels = (data * pods,)
+        return ConsensusSpec(levels=levels, compact_from_level=1,
+                             granularity="flat")
+    raise ValueError(g)
+
+
+def _walk(tree, fn, path=()):
+    """Map over a nested dict/list/tuple pytree with '/'-joined key paths."""
+    if isinstance(tree, dict):
+        return {k: _walk(v, fn, path + (str(k),)) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_walk(v, fn, path + (str(i),)) for i, v in enumerate(tree)]
+        return type(tree)(t)
+    return fn("/".join(path), tree)
+
+
+def _flat_specs(spec_tree, prefix=""):
+    out = {}
+    for k, v in spec_tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flat_specs(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+class Engine:
+    def __init__(self, bundle: ModelBundle, mesh: Mesh,
+                 shape: Optional[ShapeConfig] = None,
+                 consensus: Optional[ConsensusSpec] = None,
+                 extra_fsdp: bool = None):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.mesh = mesh
+        self.axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.consensus = consensus or make_consensus_spec(self.cfg, mesh)
+        self.spec = EngineSpec(
+            plan=bundle.plan, consensus=self.consensus, hp=self.cfg.hsadmm,
+            stack_map=tuple(bundle.stack_map))
+        self.shape = shape
+        # pod-granularity workers are internally synchronous-FSDP: spill
+        # param dims over the data axis too
+        if extra_fsdp is None:
+            extra_fsdp = self.consensus.granularity == "pod"
+        self.extra_fsdp = extra_fsdp
+        self.param_specs_flat = _flat_specs(bundle.param_specs)
+        self._shardings = None
+
+    # ------------------------------------------------------------------ #
+    # sharding construction
+    # ------------------------------------------------------------------ #
+
+    @property
+    def workers(self) -> int:
+        return self.consensus.num_workers
+
+    def _lead_spec(self, m: int):
+        """Sharding entry for a leading consensus dim of size m."""
+        pods = self.axes.get("pod", 1)
+        data = self.axes.get("data", 1)
+        if pods > 1 and m == pods * data:
+            return ("pod", "data")
+        if m == data:
+            return "data"
+        if pods > 1 and m % pods == 0 and m > 1:
+            return "pod"
+        return None
+
+    def _param_spec(self, key: str, pshape, used_axes) -> tuple:
+        base = self.param_specs_flat.get(key, P())
+        entries = list(base) + [None] * (len(pshape) - len(base))
+        # optional FSDP spill over unused lead axes (largest divisible dim)
+        for ax in ("data", "pod"):
+            if ax in used_axes or ax not in self.axes:
+                continue
+            if not (self.extra_fsdp or ax == "data"):
+                continue
+            size = self.axes[ax]
+            best, best_dim = -1, 0
+            for i, (e, dim) in enumerate(zip(entries, pshape)):
+                if e is None and dim % size == 0 and dim > best_dim:
+                    best, best_dim = i, dim
+            if best >= 0 and (self.extra_fsdp or best_dim >= size * 64):
+                entries[best] = ax
+                used_axes = used_axes | {ax}
+        return tuple(entries)
+
+    def state_shardings(self):
+        if self._shardings is not None:
+            return self._shardings
+        key = jax.random.PRNGKey(0)
+        p0_shape = jax.eval_shape(self.bundle.init, key)
+        st_shape = jax.eval_shape(
+            functools.partial(init_state, spec=self.spec), p0_shape)
+
+        W = self.workers
+
+        def leaf_sharding(path, leaf):
+            parts = path.split("/")
+            group = parts[0]
+            if group in ("theta", "u", "mom"):
+                key2 = "/".join(parts[1:])
+                lead = self._lead_spec(W)
+                used = set(lead) if isinstance(lead, tuple) else \
+                    ({lead} if lead else set())
+                pspec = self._param_spec(key2, leaf.shape[1:], used)
+                return NamedSharding(self.mesh, P(lead, *pspec))
+            if group in ("z", "v"):
+                key2 = "/".join(parts[2:])
+                m = leaf.shape[0]
+                lead = self._lead_spec(m)
+                used = set(lead) if isinstance(lead, tuple) else \
+                    ({lead} if lead else set())
+                base = self.param_specs_flat.get(key2, P())
+                entries = list(base) + [None] * (len(leaf.shape) - 1 -
+                                                 len(base))
+                # ZeRO-style data-axis spill ONLY when it aligns with the
+                # natural reduce output (m==1 fully reduced, or pod-gran
+                # workers already FSDP over data).  A partially-grouped lead
+                # (e.g. M1=4 virtual nodes on a 16-wide data axis) cannot be
+                # expressed in a PartitionSpec; forcing an FSDP respill there
+                # makes GSPMD fall back to involuntary full remat (measured:
+                # 98GiB/device) — keep those model-sharded + lead-replicated.
+                if m == 1 or self.consensus.granularity == "pod":
+                    for ax in ("data", "pod"):
+                        if ax in used or ax not in self.axes:
+                            continue
+                        size = self.axes[ax]
+                        best, best_dim = -1, 0
+                        for i, (e, dim) in enumerate(
+                                zip(entries, leaf.shape[1:])):
+                            if e is None and dim % size == 0 \
+                                    and dim > best_dim:
+                                best, best_dim = i, dim
+                        if best >= 0:
+                            entries[best] = ax
+                            used = used | {ax}
+                return NamedSharding(self.mesh, P(lead, *entries))
+            if group == "masks" and parts[-1] in ("idx", "valid") \
+                    and leaf.ndim >= 2 \
+                    and leaf.shape[-2] == self.axes.get("model", 0):
+                # balanced-rule indices: keep the shard-block axis on the
+                # model axis so FROZEN-path gathers stay shard-local (a
+                # replicated idx forced GSPMD to all-gather every z leaf:
+                # +1.5GiB/round measured on tinyllama)
+                spec = [None] * leaf.ndim
+                spec[-2] = "model"
+                return NamedSharding(self.mesh, P(*spec))
+            # rho / masks / weights / counters: tiny, replicated
+            return NamedSharding(self.mesh, P())
+
+        self._shardings = _walk(st_shape, leaf_sharding)
+        self._state_shapes = st_shape
+        return self._shardings
+
+    def batch_sharding(self, batch_shapes: dict):
+        lead = self._lead_spec(self.workers)
+        # pod-granularity workers are internally synchronous-DP: the
+        # per-worker batch dim shards over the data axis (and pod when the
+        # lead dim doesn't consume it).
+        inner = None
+        if self.consensus.granularity == "pod":
+            used = lead if isinstance(lead, tuple) else (lead,)
+            free = [a for a in ("pod", "data") if a in self.axes
+                    and a not in used]
+            inner = tuple(free) if free else None
+        return {k: NamedSharding(
+            self.mesh, P(lead, inner, *([None] * (len(v.shape) - 2))))
+            for k, v in batch_shapes.items()}
+
+    def state_struct(self):
+        """ShapeDtypeStructs with shardings attached (for AOT lowering).
+        Structural zip (CNN rule names contain '/' — no path lookups)."""
+        sh = self.state_shardings()
+        return jax.tree.map(
+            lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                                 sharding=s),
+            self._state_shapes, sh,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    # ------------------------------------------------------------------ #
+    # jitted steps
+    # ------------------------------------------------------------------ #
+
+    def local_step_fn(self):
+        ga = max(self.cfg.grad_accum, 1)
+        baxis = "data" if self.consensus.granularity == "pod" else None
+
+        def fn(state, batch, eta):
+            from ..models import layers as _L
+            _L.set_batch_axis(baxis)   # trace-time activation-layout policy
+            out = local_step(state, batch, self.bundle.train_loss,
+                             self.spec, eta, grad_accum=ga)
+            _L.set_batch_axis(None)
+            return out
+        return jax.jit(fn, donate_argnums=(0,))
+
+    def consensus_step_fn(self, frozen: bool):
+        def fn(state):
+            return consensus_step(state, self.spec, frozen=frozen)
+        return jax.jit(fn, donate_argnums=(0,))
+
+    def init_state_fn(self):
+        sh = self.state_shardings()
+
+        def fn(key):
+            return init_state(self.bundle.init(key), self.spec)
+        return jax.jit(fn, out_shardings=sh)
+
+    # ------------------------------------------------------------------ #
+    # serving shardings
+    # ------------------------------------------------------------------ #
+
+    def serve_param_shardings(self):
+        key = jax.random.PRNGKey(0)
+        p0 = jax.eval_shape(self.bundle.init, key)
+
+        def one(path, leaf):
+            pspec = self._param_spec(path, leaf.shape, set())
+            return NamedSharding(self.mesh, P(*pspec))
+        return _walk(p0, one)
+
+    def serve_cache_shardings(self, B: int, S: int):
+        data_axes = [(n, self.axes[n]) for n in ("pod", "data")
+                     if n in self.axes]
+        specs = self.bundle.cache_specs(B, S, data_axes)
+        return jax.tree.map(
+            lambda sp: NamedSharding(self.mesh, sp), specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def _get(tree, path):
+    node = tree
+    for part in path.split("/"):
+        node = node[int(part)] if isinstance(node, (list, tuple)) \
+            else node[part]
+    return node

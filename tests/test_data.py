@@ -1,0 +1,29 @@
+"""Synthetic data pipeline: determinism + shard disjointness."""
+import numpy as np
+
+from repro.data.synthetic import SyntheticLM, SyntheticImages
+from repro.data.pipeline import batches, prefetch
+
+
+def test_lm_stream_deterministic():
+    s = SyntheticLM(vocab=101, seq_len=16, batch=2, workers=4)
+    a = s.batch_at(3)["tokens"]
+    b = s.batch_at(3)["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = s.batch_at(4)["tokens"]
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert a.shape == (4, 2, 16)
+    assert int(a.max()) < 101
+
+
+def test_images_learnable_structure():
+    s = SyntheticImages(img_size=8, n_classes=4, batch=64, workers=1)
+    b = s.batch_at(0)
+    x, y = np.asarray(b["images"]), np.asarray(b["labels"])
+    means = [x[0][y[0] == c].mean() for c in range(4) if (y[0] == c).any()]
+    assert np.std(means) > 0.1  # class-dependent means are separable
+
+
+def test_prefetch_order():
+    it = prefetch(iter(range(10)), size=2)
+    assert list(it) == list(range(10))

@@ -1,0 +1,166 @@
+"""H-SADMM algebra: exact consensus on convex problems, freeze protocol,
+adaptive penalties, solo degenerate mode (DESIGN.md §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ConsensusSpec, HsadmmConfig
+from repro.core import (EngineSpec, init_state, local_step, consensus_step,
+                        project, get_leaf, leaf_keys)
+from repro.core.sparsity import GroupRule, LeafAxis, SparsityPlan
+
+
+def _quad_problem(key, W=4, L=3, D=8, F=16):
+    params0 = {"blocks": {"w_in": jax.random.normal(key, (L, D, F)),
+                          "w_out": jax.random.normal(
+                              jax.random.fold_in(key, 1), (L, F, D))},
+               "emb": jax.random.normal(jax.random.fold_in(key, 2), (32, D))}
+    targets = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 3),
+                                    (W,) + x.shape), params0)
+
+    def loss_fn(th, t):
+        return 0.5 * sum(jnp.sum((get_leaf(th, k) - get_leaf(t, k))**2)
+                         for k in leaf_keys(th))
+    return params0, targets, loss_fn
+
+
+def _run(spec, params0, targets, loss_fn, outer=50, inner=40, eta=0.3,
+         freeze_at=10):
+    state = init_state(params0, spec)
+    jl = jax.jit(lambda s, b: local_step(s, b, loss_fn, spec, eta))
+    jc = jax.jit(lambda s: consensus_step(s, spec, frozen=False))
+    jf = jax.jit(lambda s: consensus_step(s, spec, frozen=True))
+    info = {}
+    for k in range(outer):
+        for _ in range(inner):
+            state, _ = jl(state, targets)
+        state, info = (jc if k < freeze_at else jf)(state)
+    return state, info
+
+
+@pytest.mark.parametrize("levels", [(4,), (2, 2), (2, 1, 2)])
+def test_consensus_exact_without_sparsity(levels):
+    """No sparsity: z must converge to the mean of worker targets for any
+    hierarchy depth (1-, 2- and 3-level ADMM give the same fixed point)."""
+    key = jax.random.PRNGKey(0)
+    params0, targets, loss_fn = _quad_problem(key)
+    spec = EngineSpec(plan=SparsityPlan(()),
+                      consensus=ConsensusSpec(levels=levels,
+                                              compact_from_level=1),
+                      hp=HsadmmConfig(rho1=1.0, rho2=1.0, weight_decay=0.0,
+                                      adapt_mu=1e9),
+                      use_momentum=False, stack_map=())
+    # deeper hierarchies add dual dynamics -> more outer iterations
+    state, info = _run(spec, params0, targets, loss_fn,
+                       outer=40 if len(levels) < 3 else 90)
+    zbar = jax.tree.map(lambda t: jnp.mean(t, 0), targets)
+    z = state["z"][-1]
+    for k in leaf_keys(zbar):
+        np.testing.assert_allclose(np.asarray(get_leaf(z, k)[0]),
+                                   np.asarray(get_leaf(zbar, k)),
+                                   rtol=1e-3, atol=1e-3)
+    assert float(info["r_primal"]) < 1e-2
+
+
+def test_consensus_with_projection_on_support_exact():
+    """With the group-l0 projection: consensus restricted to the frozen
+    support equals the convex optimum there; off-support exactly zero."""
+    key = jax.random.PRNGKey(0)
+    params0, targets, loss_fn = _quad_problem(key)
+    plan = SparsityPlan((GroupRule(
+        "ffn", (LeafAxis("blocks/w_in", 2), LeafAxis("blocks/w_out", 1)),
+        groups=16, keep=8, stack_ndims=1),))
+    spec = EngineSpec(plan=plan,
+                      consensus=ConsensusSpec(levels=(2, 2),
+                                              compact_from_level=1),
+                      hp=HsadmmConfig(rho1=1.0, rho2=1.0, weight_decay=0.0,
+                                      t_freeze=10),
+                      use_momentum=False)
+    state, info = _run(spec, params0, targets, loss_fn, outer=60)
+    zbar = jax.tree.map(lambda t: jnp.mean(t, 0), targets)
+    z = state["z"][-1]
+    m = state["masks"]["ffn"]["mask"]
+    zz = np.asarray(get_leaf(z, "blocks/w_in")[0])
+    bb = np.asarray(get_leaf(zbar, "blocks/w_in"))
+    mm = np.asarray(m)[:, None, :]
+    assert np.max(np.abs((zz - bb) * mm)) < 5e-3
+    assert np.max(np.abs(zz * (1 - mm))) == 0.0
+    # unpruned leaves reach exact consensus
+    np.testing.assert_allclose(np.asarray(get_leaf(z, "emb")[0]),
+                               np.asarray(get_leaf(zbar, "emb")),
+                               atol=5e-3)
+
+
+def test_straggler_weighting_excludes_dead_worker():
+    """weights=0 for one worker: consensus = mean over the others."""
+    key = jax.random.PRNGKey(4)
+    params0, targets, loss_fn = _quad_problem(key, W=4)
+    spec = EngineSpec(plan=SparsityPlan(()),
+                      consensus=ConsensusSpec(levels=(4,),
+                                              compact_from_level=1),
+                      hp=HsadmmConfig(rho1=1.0, rho2=1.0, weight_decay=0.0,
+                                      adapt_mu=1e9),
+                      use_momentum=False, stack_map=())
+    state = init_state(params0, spec)
+    state["weights"] = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    jl = jax.jit(lambda s, b: local_step(s, b, loss_fn, spec, 0.3))
+    jc = jax.jit(lambda s: consensus_step(s, spec, frozen=False))
+    for k in range(40):
+        for _ in range(40):
+            state, _ = jl(state, targets)
+        state, info = jc(state)
+    zbar3 = jax.tree.map(lambda t: jnp.mean(t[:3], 0), targets)
+    np.testing.assert_allclose(
+        np.asarray(get_leaf(state["z"][-1], "emb")[0]),
+        np.asarray(get_leaf(zbar3, "emb")), rtol=2e-2, atol=2e-2)
+
+
+def test_solo_mode_projects_theta():
+    key = jax.random.PRNGKey(5)
+    params0 = {"blocks": {"w_in": jax.random.normal(key, (2, 4, 16)),
+                          "w_out": jax.random.normal(key, (2, 16, 4))}}
+    plan = SparsityPlan((GroupRule(
+        "ffn", (LeafAxis("blocks/w_in", 2), LeafAxis("blocks/w_out", 1)),
+        groups=16, keep=8, stack_ndims=1),))
+    spec = EngineSpec(plan=plan,
+                      consensus=ConsensusSpec(levels=(1,), granularity="pod",
+                                              compact_from_level=0),
+                      hp=HsadmmConfig(), use_momentum=True)
+    assert spec.solo
+    state = init_state(params0, spec)
+    assert "u" not in state and "z" not in state
+    state2, info = consensus_step(state, spec, frozen=False)
+    m = state2["masks"]["ffn"]["mask"]
+    assert float(m.sum(-1)[0]) == 8
+    w = np.asarray(get_leaf(state2["theta"], "blocks/w_in")[0])
+    nz = (np.abs(w).sum(1) > 0)
+    assert nz.sum() == 2 * 8
+
+
+def test_bitwise_or_mode_union_semantics():
+    """bitwise_or: every node's local top-k support survives in the union
+    (when it fits the static budget), matching paper Eq. 14."""
+    key = jax.random.PRNGKey(6)
+    params0, targets, loss_fn = _quad_problem(key, W=4, F=16)
+    plan = SparsityPlan((GroupRule(
+        "ffn", (LeafAxis("blocks/w_in", 2), LeafAxis("blocks/w_out", 1)),
+        groups=16, keep=4, stack_ndims=1),))
+    spec = EngineSpec(plan=plan,
+                      consensus=ConsensusSpec(levels=(2, 2),
+                                              compact_from_level=1),
+                      hp=HsadmmConfig(mask_mode="bitwise_or",
+                                      bitwise_or_slack=2.0),
+                      use_momentum=False)
+    state = init_state(params0, spec)
+    jl = jax.jit(lambda s, b: local_step(s, b, loss_fn, spec, 0.3))
+    jc = jax.jit(lambda s: consensus_step(s, spec, frozen=False))
+    for _ in range(3):
+        for _ in range(10):
+            state, _ = jl(state, targets)
+        state, _ = jc(state)
+    m = state["masks"]["ffn"]
+    assert m["idx"].shape[-1] == 8          # static budget = keep * slack
+    assert np.all(np.asarray(m["valid"].sum(-1)) >= 4)
+    assert np.all(np.asarray(m["mask"].sum(-1)) >= 4)

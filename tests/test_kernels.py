@@ -1,0 +1,66 @@
+"""Per-kernel interpret-mode validation vs ref.py oracles, with
+shape/dtype sweeps (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_scan
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (6, 128, 256), (2, 3, 64, 384)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_fused_prox_sgd(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    xs = [jax.random.normal(jax.random.fold_in(k, i), shape).astype(dtype)
+          for i in range(5)]
+    t, m = ops.fused_prox_sgd(*xs, eta=1e-2, rho=1e-3, momentum=0.9)
+    tr, mr = ref.fused_prox_sgd_ref(*xs, eta=1e-2, rho=1e-3, momentum=0.9)
+    tol = 1e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(t, np.float32),
+                               np.asarray(tr, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(m, np.float32),
+                               np.asarray(mr, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("C,B", [(64, 24), (128, 64), (32, 8)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_compact_expand(C, B, dtype):
+    k = jax.random.PRNGKey(1)
+    x = jax.random.normal(k, (4, C, 32)).astype(dtype)
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    c = ops.compact_groups(x, idx)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(x[:, idx, :]))
+    e = ops.expand_groups(c, idx, full=C)
+    mask = jnp.zeros((C,)).at[idx].set(1.0)
+    ref_e = (x.astype(jnp.float32) * mask[None, :, None]).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(ref_e))
+
+
+@pytest.mark.parametrize("G,C,K", [(5, 128, 384), (1, 64, 1024), (8, 16, 48)])
+def test_group_norms(G, C, K):
+    x = jax.random.normal(jax.random.PRNGKey(2), (G, C, K))
+    np.testing.assert_allclose(np.asarray(ops.group_norms_sq(x)),
+                               np.asarray(ref.group_norms_ref(x)),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("T,chunk,H,P,N", [(64, 16, 8, 16, 16),
+                                           (48, 8, 4, 8, 8),
+                                           (32, 32, 8, 16, 16)])
+def test_ssd_chunk_scan(T, chunk, H, P, N):
+    k = jax.random.PRNGKey(3)
+    B = 2
+    x = jax.random.normal(k, (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1),
+                                           (B, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(k, 3), (B, T, N))
+    Cm = jax.random.normal(jax.random.fold_in(k, 4), (B, T, N))
+    y, h = ops.ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=4)
+    yr, hr = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=2e-4, atol=2e-4)

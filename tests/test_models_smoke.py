@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs;
+plus one decode step where the arch serves."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, SHAPES
+from repro.core.sparsity import get_leaf
+from repro.models import build
+
+
+def _batch(cfg, b, key):
+    if cfg.family == "cnn":
+        return {"images": jax.random.normal(key, (b, cfg.img_size,
+                                                  cfg.img_size, 3)),
+                "labels": jax.random.randint(key, (b,), 0, cfg.n_classes)}
+    batch = {"tokens": jax.random.randint(key, (b, 16), 0, cfg.vocab)}
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED + ["resnet18"])
+def test_smoke_train_step(name):
+    cfg = get_config(name, smoke=True)
+    bundle = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = bundle.init(key)
+    batch = _batch(cfg, 2, key)
+    for nm, shp, dt in bundle.extra_inputs:
+        batch[nm] = jnp.zeros((2,) + shp(SHAPES["train_4k"]), dt)
+    loss, grads = jax.jit(jax.value_and_grad(bundle.train_loss))(params,
+                                                                 batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    # one SGD step reduces loss on the same batch
+    p2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params,
+                      grads)
+    loss2 = jax.jit(bundle.train_loss)(p2, batch)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_smoke_decode_step(name):
+    cfg = get_config(name, smoke=True)
+    bundle = build(cfg)
+    if bundle.decode is None:
+        pytest.skip("no serving path")
+    key = jax.random.PRNGKey(0)
+    params = bundle.init(key)
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+    cache = bundle.init_cache(2, 12)
+    kw = {}
+    for nm, shp, dt in bundle.extra_inputs:
+        kw[nm] = jnp.zeros((2,) + shp(SHAPES["train_4k"]), dt)
+    logits, cache = bundle.prefill(params, tokens, cache, q_chunk=8,
+                                   k_chunk=8, **kw)
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = bundle.decode(params, nxt, cache, k_chunk=8)
+    assert logits2.shape[0] == 2
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+    assert int(cache["len"]) == 9
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_plan_leaves_exist_and_axes_match(name):
+    cfg = get_config(name, smoke=True)
+    bundle = build(cfg)
+    params = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    for rule in bundle.plan.rules:
+        for la in rule.leaves:
+            leaf = get_leaf(params, la.key)
+            if rule.compactable:
+                assert leaf.shape[la.axes[0]] == rule.groups, (rule.name, la)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published dimensions."""
+    dims = {
+        "mamba2-780m": dict(n_layers=48, d_model=1536, vocab=50280,
+                            ssm_state=128),
+        "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                                n_kv_heads=16, d_ff=1408, vocab=151936,
+                                n_experts=60, moe_top_k=4),
+        "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                     n_kv_heads=8, d_ff=512, vocab=49155,
+                                     n_experts=40, moe_top_k=8),
+        "minitron-4b": dict(n_layers=32, d_model=3072, n_heads=24,
+                            n_kv_heads=8, d_ff=9216, vocab=256000),
+        "qwen2.5-3b": dict(n_layers=36, d_model=2048, n_heads=16,
+                           n_kv_heads=2, d_ff=11008, vocab=151936,
+                           qkv_bias=True),
+        "deepseek-coder-33b": dict(n_layers=62, d_model=7168, n_heads=56,
+                                   n_kv_heads=8, d_ff=19200, vocab=32256),
+        "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                               n_kv_heads=4, d_ff=5632, vocab=32000),
+        "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=24576, vocab=65536,
+                                     n_experts=16, moe_top_k=2,
+                                     attn_period=8),
+        "whisper-base": dict(n_layers=6, enc_layers=6, d_model=512,
+                             n_heads=8, d_ff=2048, vocab=51865),
+        "llama-3.2-vision-90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=28672, vocab=128256,
+                                     cross_period=5),
+    }
+    for name, expect in dims.items():
+        cfg = get_config(name)
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+def test_param_counts_plausible():
+    """Full-config param counts are in the published ballpark."""
+    import math
+    expect = {"tinyllama-1.1b": (1.0e9, 1.3e9),
+              "mamba2-780m": (0.7e9, 1.0e9),
+              "qwen2-moe-a2.7b": (13e9, 16e9),
+              "jamba-1.5-large-398b": (370e9, 430e9)}
+    for name, (lo, hi) in expect.items():
+        cfg = get_config(name)
+        bundle = build(cfg)
+        p = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        n = sum(math.prod(x.shape) for x in jax.tree.leaves(p))
+        assert lo < n < hi, (name, n)

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (GroupRule, LeafAxis, SparsityPlan,
+                                 topk_mask, project)
+from repro.core.shrinkage import compact_leaf, expand_leaf
+from repro.core.masks import MaskSyncConfig, sync_masks
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(C=st.integers(4, 64), frac=st.floats(0.1, 1.0),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_topk_mask_counts_and_membership(C, frac, seed):
+    keep = max(1, int(C * frac))
+    s = jax.random.uniform(jax.random.PRNGKey(seed), (2, C))
+    mask, idx = topk_mask(s, keep)
+    assert np.all(np.asarray(mask.sum(-1)) == keep)
+    # mask positions == idx set
+    for r in range(2):
+        assert set(np.flatnonzero(np.asarray(mask[r]))) == \
+            set(np.asarray(idx[r]).tolist())
+
+
+@given(C=st.sampled_from([16, 32, 64]), shards=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_compact_expand_equals_mask(C, shards, seed):
+    """expand(compact(x)) == x * mask — the §4.4 pipeline is lossless on
+    the kept support and exactly zero elsewhere."""
+    keep = C // 2
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.uniform(key, (C,))
+    mask, idx = topk_mask(s, keep, shards)
+    x = jax.random.normal(key, (3, C, 4))
+    c = compact_leaf(x, idx, ax=1, stack_ndims=0, offset=1, shards=shards)
+    e = expand_leaf(c, idx, ax=1, full=C, stack_ndims=0, offset=1,
+                    shards=shards)
+    np.testing.assert_allclose(np.asarray(e),
+                               np.asarray(x * mask[None, :, None]),
+                               rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_projection_norm_nonincreasing(seed):
+    key = jax.random.PRNGKey(seed)
+    p = {"w": jax.random.normal(key, (8, 16))}
+    plan = SparsityPlan((GroupRule("g", (LeafAxis("w", 1),), groups=16,
+                                   keep=8, stack_ndims=0),))
+    proj, _ = project(p, plan)
+    assert float(jnp.sum(proj["w"]**2)) <= float(jnp.sum(p["w"]**2)) + 1e-6
+
+
+@given(M=st.integers(2, 6), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_bitwise_or_union_superset(M, seed):
+    """Eq. 14: the global mask contains every node's local support
+    (given enough static budget)."""
+    C, keep = 16, 4
+    rule = GroupRule("g", (LeafAxis("w", 1),), groups=C, keep=keep,
+                     stack_ndims=0)
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (M, C))
+    cfg = MaskSyncConfig("bitwise_or", slack=float(M))
+    idx, valid, mask = sync_masks(scores, rule, cfg)
+    union = np.zeros(C)
+    for i in range(M):
+        _, li = topk_mask(scores[i], keep)
+        union[np.asarray(li)] = 1
+    assert np.all(np.asarray(mask) >= union)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_score_consensus_masks_identical_across_nodes(seed):
+    rule = GroupRule("g", (LeafAxis("w", 1),), groups=32, keep=16,
+                     stack_ndims=0)
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (4, 32))
+    idx, valid, mask = sync_masks(scores, rule,
+                                  MaskSyncConfig("score_consensus"))
+    assert mask.shape == (32,)          # one global mask, no node dim
+    assert float(mask.sum()) == 16

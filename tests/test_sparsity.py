@@ -1,0 +1,80 @@
+"""Unit tests: structured sparsity sets + projections (paper §2.1/§3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import (GroupRule, LeafAxis, SparsityPlan,
+                                 group_scores, topk_mask, project,
+                                 keep_count, apply_mask_rule)
+
+
+def _plan(F=16, keep=8, shards=1):
+    return SparsityPlan((GroupRule(
+        "ffn", (LeafAxis("win", 1), LeafAxis("wout", 0)),
+        groups=F, keep=keep, stack_ndims=0, shards=shards),))
+
+
+def _params(key, D=6, F=16):
+    k1, k2 = jax.random.split(key)
+    return {"win": jax.random.normal(k1, (D, F)),
+            "wout": jax.random.normal(k2, (F, D))}
+
+
+def test_projection_keeps_topk_groups():
+    p = _params(jax.random.PRNGKey(0))
+    plan = _plan()
+    proj, masks = project(p, plan)
+    mask, idx = masks["ffn"]
+    assert mask.sum() == 8
+    # kept groups are the top-8 by aggregated norm
+    s = np.asarray(jnp.sum(p["win"]**2, 0) + jnp.sum(p["wout"]**2, 1))
+    expect = set(np.argsort(-s)[:8].tolist())
+    assert set(np.asarray(idx).tolist()) == expect
+    # off-support zero, on-support identical
+    off = np.asarray(proj["win"])[:, np.asarray(mask) == 0]
+    assert np.all(off == 0)
+    on = np.asarray(mask) == 1
+    np.testing.assert_array_equal(np.asarray(proj["win"])[:, on],
+                                  np.asarray(p["win"])[:, on])
+
+
+def test_projection_idempotent():
+    p = _params(jax.random.PRNGKey(1))
+    plan = _plan()
+    p1, m1 = project(p, plan)
+    p2, m2 = project(p1, plan)
+    for k in ("win", "wout"):
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+def test_blocked_topk_balanced():
+    s = jax.random.uniform(jax.random.PRNGKey(2), (3, 32))
+    mask, idx = topk_mask(s, 16, shards=4)
+    m = np.asarray(mask).reshape(3, 4, 8)
+    assert np.all(m.sum(-1) == 4), "balanced: keep/shards per block"
+    assert idx.shape == (3, 4, 4)
+    assert np.all(np.asarray(idx) < 8)
+
+
+def test_multi_axis_shape_rule():
+    # paper's S_s: composite (KH,KW,Cin) groups on a conv tensor
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, 8, 4))
+    rule = GroupRule("s", (LeafAxis("w", (0, 1, 2)),), groups=72, keep=36,
+                     stack_ndims=0)
+    assert not rule.compactable
+    s = group_scores({"w": w}, rule)
+    assert s.shape == (72,)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(jnp.sum(w**2, axis=3).reshape(-1)),
+        rtol=1e-6)
+    mask, _ = topk_mask(s, 36)
+    out = apply_mask_rule({"w": w}, rule, mask)
+    nz = np.asarray(jnp.sum(out["w"]**2, axis=3).reshape(-1)) > 0
+    assert nz.sum() == 36
+
+
+def test_keep_count_alignment():
+    assert keep_count(5632, 0.5, 16) == 2816
+    assert keep_count(24, 0.5, 4) == 12
+    assert keep_count(10, 0.99, 8) == 8

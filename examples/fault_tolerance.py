@@ -10,11 +10,11 @@ import tempfile
 
 from repro.configs import get_config
 from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
-from repro.dist import ft
+from repro.dist import checkpoint, ft
 from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.train.engine import Engine
-from repro.train.loop import train
+from repro.train.loop import RunConfig, train
 
 cfg = get_config("tinyllama-1.1b", smoke=True).replace(
     hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=4, t_freeze=4))
@@ -25,15 +25,16 @@ ckdir = tempfile.mkdtemp()
 print("=== phase 1: 4 workers, worker 1 dies during iters [2,5) ===")
 eng = Engine(bundle, make_host_mesh(), shape,
              consensus=ConsensusSpec(levels=(2, 2), compact_from_level=1))
-_, rep = train(eng, outer_iters=6, shape=shape, eta=3e-3, ckpt_dir=ckdir,
-               ckpt_every=3, ft_policy=ft.fail_window({1: (2, 5)}))
+_, rep = train(eng, RunConfig(outer_iters=6, shape=shape, eta=3e-3,
+                              ckpt_dir=ckdir, ckpt_every=3,
+                              ft_policy=ft.fail_window({1: (2, 5)})))
 print("losses:", [round(l, 3) for l in rep.losses])
 
-import time
-time.sleep(1)
+checkpoint.flush()  # background writes are durable (train() also flushes)
 print("\n=== phase 2: elastic restart with 2 workers from the checkpoint ===")
 eng2 = Engine(bundle, make_host_mesh(), shape,
               consensus=ConsensusSpec(levels=(2, 1), compact_from_level=1))
-_, rep2 = train(eng2, outer_iters=9, shape=shape, eta=3e-3, ckpt_dir=ckdir)
+_, rep2 = train(eng2, RunConfig(outer_iters=9, shape=shape, eta=3e-3,
+                                ckpt_dir=ckdir))
 print("losses:", [round(l, 3) for l in rep2.losses])
 print("OK: consensus state carried across worker-count change")

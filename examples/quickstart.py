@@ -15,7 +15,7 @@ from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.train.engine import Engine
-from repro.train.loop import train
+from repro.train.loop import RunConfig, train
 
 cfg = get_config("tinyllama-1.1b", smoke=True).replace(
     hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=4, t_freeze=5,
@@ -27,10 +27,16 @@ print("sparsity plan:", [f"{r.name}: keep {r.keep}/{r.groups}"
 engine = Engine(bundle, make_host_mesh(),
                 consensus=ConsensusSpec(levels=(2, 2), compact_from_level=1))
 shape = ShapeConfig("quickstart", "train", seq_len=64, global_batch=8)
-state, report = train(engine, outer_iters=10, shape=shape, eta=3e-3)
+run = RunConfig(outer_iters=10, shape=shape, eta=3e-3, hlo_stats=True)
+state, report = train(engine, run)
 
 print(f"\nloss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
 print(f"masks frozen at outer iteration {report.frozen_at}")
-print(f"inter-node bytes/round: compact={report.comm_bytes_internode[-1]/1e6:.2f}MB "
+print(f"inter-node bytes/round (analytic): "
+      f"compact={report.comm_bytes_internode[-1]/1e6:.2f}MB "
       f"vs dense={report.comm_bytes_dense_equiv[-1]/1e6:.2f}MB "
       f"({(1-report.comm_bytes_internode[-1]/report.comm_bytes_dense_equiv[-1])*100:.0f}% saved)")
+for name, h in report.hlo_comm.items():
+    print(f"measured [{name}] schedule: {h['summary']['total_count']} "
+          f"collectives, wire={h['summary']['total_wire_bytes']/1e6:.3f}MB, "
+          f"by fabric={ {k: round(v/1e6, 3) for k, v in h['axis_bytes'].items()} }MB")

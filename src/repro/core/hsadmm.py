@@ -161,16 +161,13 @@ def init_state(params0: Params, spec: EngineSpec) -> dict:
     state["u"] = u
 
     m = W
-    zs, vs = [], []
+    zs = []
     for g in levels:
         m //= g
-        zk = tree_map_leaves(rep(m), params0)
-        zs.append(zk)
-        if m > 1 or True:  # keep uniform structure; top-level v unused
-            vs.append(jax.tree.map(jnp.zeros_like, zk))
-    vs = vs[:-1]  # duals exist between consecutive levels only
+        zs.append(tree_map_leaves(rep(m), params0))
     state["z"] = zs
-    state["v"] = vs
+    # duals exist between consecutive levels only: v[k] couples z[k]<->z[k+1]
+    state["v"] = [jax.tree.map(jnp.zeros_like, zk) for zk in zs[:-1]]
 
     # layer-wise penalties rho[k]: list over level boundaries (K entries:
     # rho[0] = worker<->z1 (paper rho1), rho[k>=1] = z_k<->z_{k+1})

@@ -1,0 +1,29 @@
+"""``repro.dist`` — the distributed-runtime layer of the PruneX repro.
+
+The algorithmic core (``repro.core``) knows nothing about processes,
+disks, or fabrics; this package supplies everything a *system* run needs
+on top of it, behind a stable surface the training loop and launchers
+consume (CGX/PacTrain-style separation of the communication/system layer
+from the optimizer):
+
+* :mod:`repro.dist.checkpoint` — atomic directory-swap checkpoints with a
+  background writer thread and *elastic* restore (worker-count changes
+  re-seed new workers from the global consensus ``z``),
+* :mod:`repro.dist.ft` — composable failure/straggler policies producing
+  the consensus weight vectors that make worker loss a no-op,
+* :mod:`repro.dist.hlo` — compiled-HLO introspection: per-collective
+  records, mesh-axis/fabric classification, byte aggregation — the
+  *measured* counterpart of the analytic ``plan_bytes``,
+* :mod:`repro.dist.hlo_cost` — trip-count-weighted FLOP/byte/collective
+  cost model over the compiled module's call graph.
+"""
+from . import checkpoint, ft, hlo, hlo_cost
+from .hlo import Collective, axis_bytes, collective_stats, internode_bytes, \
+    summarize
+from .hlo_cost import WeightedCost, weighted_cost
+
+__all__ = [
+    "checkpoint", "ft", "hlo", "hlo_cost",
+    "Collective", "axis_bytes", "collective_stats", "internode_bytes",
+    "summarize", "WeightedCost", "weighted_cost",
+]

@@ -1,0 +1,105 @@
+"""Failure / straggler mitigation policies (DESIGN.md §6, paper §4.6).
+
+H-SADMM tolerates worker loss through the consensus weight vector: every
+weighted group-sum in ``core.consensus`` normalizes by the summed weights,
+so a worker with weight 0 simply stops contributing — consensus neither
+stalls nor skews, and the worker's stale theta is overwritten from z when
+it rejoins (weight back to 1).
+
+A *policy* is a callable ``policy(k, W) -> np.ndarray`` mapping the outer
+iteration ``k`` and worker count ``W`` to a ``(W,)`` float32 weight vector.
+The training loop applies it at the top of every outer iteration (before
+the local steps), so a policy is pure state-free scheduling — all the
+fault-tolerance state lives in the weights themselves.
+
+Policies compose multiplicatively with :func:`compose`, e.g. a planned
+maintenance window on worker 0 plus a permanent straggler discount on
+worker 3::
+
+    policy = ft.compose(ft.fail_window({0: (10, 20)}),
+                        ft.straggler_decay({3: 0.25}, halflife=8))
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+Policy = Callable[[int, int], np.ndarray]
+
+
+def _ones(W: int) -> np.ndarray:
+    return np.ones((W,), np.float32)
+
+
+def healthy() -> Policy:
+    """All workers contribute fully (the identity policy)."""
+    return lambda k, W: _ones(W)
+
+
+def fail_window(windows: Mapping[int, tuple[int, int]]) -> Policy:
+    """Workers die for half-open outer-iteration windows.
+
+    ``windows[j] = (k0, k1)`` takes worker ``j`` out for ``k0 <= k < k1``
+    (weight 0); outside the window it contributes normally.  Workers whose
+    index falls outside the current worker count are ignored, so the same
+    policy object survives an elastic resize.
+    """
+    windows = {int(j): (int(k0), int(k1)) for j, (k0, k1) in windows.items()}
+
+    def policy(k: int, W: int) -> np.ndarray:
+        w = _ones(W)
+        for j, (k0, k1) in windows.items():
+            if 0 <= j < W and k0 <= k < k1:
+                w[j] = 0.0
+        return w
+    return policy
+
+
+def straggler_decay(stragglers: Mapping[int, float],
+                    halflife: int = 0) -> Policy:
+    """Down-weight persistently slow workers, optionally recovering.
+
+    ``stragglers[j] = f`` gives worker ``j`` initial weight ``f`` (its
+    contribution is scaled by how much useful work it delivers per round,
+    paper §4.6's proportional weighting).  With ``halflife > 0`` the
+    discount decays geometrically back toward full weight —
+    ``w_j(k) = 1 - (1 - f) * 0.5**(k / halflife)`` — modelling a transient
+    slowdown (thermal throttle, network congestion) that clears over time.
+    ``halflife == 0`` keeps the discount constant.
+    """
+    stragglers = {int(j): float(f) for j, f in stragglers.items()}
+
+    def policy(k: int, W: int) -> np.ndarray:
+        w = _ones(W)
+        for j, f in stragglers.items():
+            if not 0 <= j < W:
+                continue
+            if halflife > 0:
+                w[j] = 1.0 - (1.0 - f) * 0.5 ** (k / halflife)
+            else:
+                w[j] = f
+        return w
+    return policy
+
+
+def constant(weights: Sequence[float]) -> Policy:
+    """A fixed weight vector (truncated / padded-with-1 to the live W)."""
+    base = np.asarray(weights, np.float32)
+
+    def policy(k: int, W: int) -> np.ndarray:
+        w = _ones(W)
+        n = min(W, base.shape[0])
+        w[:n] = base[:n]
+        return w
+    return policy
+
+
+def compose(*policies: Policy) -> Policy:
+    """Elementwise product of policies — failures and discounts stack."""
+    def policy(k: int, W: int) -> np.ndarray:
+        w = _ones(W)
+        for p in policies:
+            w = w * np.asarray(p(k, W), np.float32)
+        return w.astype(np.float32)
+    return policy

@@ -32,6 +32,8 @@ from .mesh import make_production_mesh                   # noqa: E402
 
 def analyze(compiled, model: int, data: int, node: int = 4) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # jax<=0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
     # trip-count-weighted cost model (XLA's own counts scan bodies once)
@@ -83,7 +85,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "kind": shape.kind, "frozen": frozen,
            "mask_mode": hp.mask_mode, "n_params": None}
-    ctx = jax.set_mesh(mesh)
+    # jax>=0.5 exposes jax.set_mesh; older versions use Mesh as the context
+    ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
     ctx.__enter__()
 
     eng = Engine(bundle, mesh, shape)

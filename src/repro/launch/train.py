@@ -19,7 +19,7 @@ from ..configs import SHAPES, get_config
 from ..configs.base import ConsensusSpec, ShapeConfig
 from ..models import build
 from ..train.engine import Engine
-from ..train.loop import train
+from ..train.loop import RunConfig, train
 from ..train import baselines
 from ..dist import ft
 from .mesh import make_host_mesh
@@ -42,8 +42,16 @@ def main(argv=None):
     ap.add_argument("--flat", action="store_true",
                     help="PruneX (AR) flat-consensus ablation")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-keep", type=int, default=None)
     ap.add_argument("--drop-worker", default=None,
                     help="j:k0:k1 — fail worker j during [k0,k1)")
+    ap.add_argument("--straggler", default=None,
+                    help="j:factor[:halflife] — down-weight worker j")
+    ap.add_argument("--hlo-stats", action="store_true",
+                    help="report the measured collective schedule "
+                         "(parsed from the compiled HLO) next to the "
+                         "analytic plan_bytes volumes")
     ap.add_argument("--report", default=None, help="write JSON report here")
     args = ap.parse_args(argv)
 
@@ -78,17 +86,45 @@ def main(argv=None):
             cons = ConsensusSpec(levels=(W,), compact_from_level=1,
                                  granularity="flat")
         eng = Engine(bundle, mesh, shape, consensus=cons)
-        policy = None
+        policies = []
         if args.drop_worker:
-            j, k0, k1 = map(int, args.drop_worker.split(":"))
-            policy = ft.fail_window({j: (k0, k1)})
-        _, rep = train(eng, outer_iters=args.outer_iters, shape=shape,
-                       eta=args.eta, ckpt_dir=args.ckpt_dir,
-                       ft_policy=policy)
+            try:
+                j, k0, k1 = map(int, args.drop_worker.split(":"))
+            except ValueError:
+                ap.error(f"--drop-worker expects j:k0:k1, "
+                         f"got {args.drop_worker!r}")
+            policies.append(ft.fail_window({j: (k0, k1)}))
+        if args.straggler:
+            try:
+                parts = args.straggler.split(":")
+                j, factor = int(parts[0]), float(parts[1])
+                halflife = int(parts[2]) if len(parts) > 2 else 0
+            except (ValueError, IndexError):
+                ap.error(f"--straggler expects j:factor[:halflife], "
+                         f"got {args.straggler!r}")
+            policies.append(ft.straggler_decay({j: factor},
+                                               halflife=halflife))
+        run = RunConfig(outer_iters=args.outer_iters, shape=shape,
+                        eta=args.eta, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every, ckpt_keep=args.ckpt_keep,
+                        ft_policy=ft.compose(*policies) if policies else None,
+                        hlo_stats=args.hlo_stats)
+        _, rep = train(eng, run)
+        if rep.hlo_comm:
+            for name, h in rep.hlo_comm.items():
+                print(f"[hlo:{name}] collectives="
+                      f"{h['summary']['total_count']} "
+                      f"wire={h['summary']['total_wire_bytes']/1e6:.3f}MB "
+                      f"internode={h['internode_bytes']/1e6:.3f}MB "
+                      f"by_fabric={h['axis_bytes']}")
     if args.report:
         with open(args.report, "w") as f:
             json.dump({k: v for k, v in rep.__dict__.items()}, f, indent=1)
-    print("final loss:", rep.losses[-1])
+    if rep.losses:
+        print("final loss:", rep.losses[-1])
+    else:
+        print("no iterations run (checkpoint already at/after "
+              f"--outer-iters={args.outer_iters})")
 
 
 if __name__ == "__main__":

@@ -266,6 +266,27 @@ class Engine:
         return jax.jit(fn, out_shardings=sh)
 
     # ------------------------------------------------------------------ #
+    # compiled-HLO introspection (dist.hlo)
+    # ------------------------------------------------------------------ #
+
+    def consensus_hlo(self, state, frozen: bool = False) -> str:
+        """Compiled-HLO text of the consensus executable for ``state``
+        (an AOT lower+compile, independent of the loop's cached jit)."""
+        return self.consensus_step_fn(frozen).lower(state) \
+            .compile().as_text()
+
+    def consensus_collectives(self, state, frozen: bool = False):
+        """Trip-weighted :class:`repro.dist.hlo.Collective` records of the
+        consensus executable — the *measured* communication schedule, to
+        hold against the analytic ``plan_bytes`` accounting."""
+        from ..dist.hlo_cost import weighted_cost
+        txt = self.consensus_hlo(state, frozen=frozen)
+        wc = weighted_cost(txt, model=self.axes.get("model", 1),
+                           data=self.axes.get("data", 1),
+                           node=self.consensus.node_size)
+        return wc.collectives
+
+    # ------------------------------------------------------------------ #
     # serving shardings
     # ------------------------------------------------------------------ #
 

@@ -10,11 +10,17 @@ AllReduce, duals, adaptive penalties).  Handles:
   * checkpoint/restart (atomic, background, elastic — dist/checkpoint),
   * straggler/failure mitigation via the consensus weight vector
     (dist/ft policies),
-  * communication-volume accounting per phase (plan_bytes) for the
-    Fig. 5b/6 benchmarks.
+  * communication-volume accounting per phase: the analytic plan_bytes
+    numbers every round, plus (opt-in) the *measured* collective schedule
+    parsed from the compiled HLO (dist/hlo) for the Fig. 5b/6 benchmarks.
+
+Run parameters live in one :class:`RunConfig`; the legacy keyword surface
+(``train(eng, outer_iters=..., shape=..., ...)``) is a thin wrapper over
+it and keeps working.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -30,7 +36,37 @@ from ..core.shrinkage import plan_bytes
 from ..data.pipeline import batches, prefetch
 from ..data.synthetic import make_stream
 from ..dist import checkpoint as ckpt
+from ..dist import hlo
 from .engine import Engine
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything one training run needs beyond the engine itself.
+
+    The training loop consumes this single object; launchers build it
+    from CLI flags, tests from literals.  ``train`` also accepts the
+    historical keyword form and assembles a RunConfig internally.
+    """
+
+    outer_iters: int
+    shape: ShapeConfig
+    eta: float = 1e-3
+    seed: int = 0
+    # checkpointing (dist.checkpoint): atomic + background; resume picks
+    # up the newest checkpoint elastically (worker count may differ)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    ckpt_keep: Optional[int] = None
+    resume: bool = True
+    # fault tolerance (dist.ft): policy(k, W) -> (W,) consensus weights
+    ft_policy: Optional[Callable] = None
+    # optional per-iteration evaluation hook: eval_fn(k, state) -> value
+    eval_fn: Optional[Callable] = None
+    # parse the compiled consensus executables' collective schedule into
+    # report.hlo_comm (costs two extra AOT compiles; off for tests)
+    hlo_stats: bool = False
+    log: Optional[Callable] = print
 
 
 @dataclass
@@ -42,13 +78,19 @@ class TrainReport:
     comm_bytes_internode: list = field(default_factory=list)
     comm_bytes_dense_equiv: list = field(default_factory=list)
     wall_times: list = field(default_factory=list)
+    evals: list = field(default_factory=list)
     frozen_at: Optional[int] = None
     outer_iters: int = 0
+    # measured collective schedule per executable (dist.hlo), keyed
+    # "dynamic"/"frozen"; None unless RunConfig.hlo_stats
+    hlo_comm: Optional[dict] = None
 
 
-def comm_volume(engine: Engine, frozen_mask_live: bool) -> tuple[int, int]:
+def comm_volume(engine: Engine) -> tuple[int, int]:
     """(dense, compact) inter-node payload bytes per consensus round, per
-    node — exact accounting from the plan (matches the HLO collectives)."""
+    node — analytic accounting from the sparsity plan.  The measured
+    counterpart (actual XLA schedule) is ``engine.consensus_hlo`` +
+    ``dist.hlo.collective_stats``."""
     bundle = engine.bundle
     p0 = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
     shapes = {k: tuple(v.shape) for k, v in flatten(p0).items()}
@@ -56,17 +98,44 @@ def comm_volume(engine: Engine, frozen_mask_live: bool) -> tuple[int, int]:
     return plan_bytes(shapes, bundle.plan, engine.spec.budgets, dtype)
 
 
-def train(engine: Engine, *, outer_iters: int, shape: ShapeConfig,
-          eta: float = 1e-3, seed: int = 0, ckpt_dir: Optional[str] = None,
-          ckpt_every: int = 10, resume: bool = True,
-          ft_policy: Optional[Callable] = None,
-          eval_fn: Optional[Callable] = None,
-          log: Optional[Callable] = print) -> tuple[dict, TrainReport]:
-    """Run the full H-SADMM training loop on the engine's mesh."""
+def _hlo_comm_report(engine: Engine, state) -> dict:
+    """Measured per-executable collective schedule (trip-weighted)."""
+    out = {}
+    for name, frozen in (("dynamic", False), ("frozen", True)):
+        colls = engine.consensus_collectives(state, frozen=frozen)
+        out[name] = {
+            "summary": hlo.summarize(colls),
+            "axis_bytes": hlo.axis_bytes(colls),
+            "internode_bytes": hlo.internode_bytes(colls),
+        }
+    return out
+
+
+def train(engine: Engine, run: Optional[RunConfig] = None, *,
+          shape: Optional[ShapeConfig] = None,
+          **legacy_kw) -> tuple[dict, TrainReport]:
+    """Run the full H-SADMM training loop on the engine's mesh.
+
+    New surface: ``train(engine, RunConfig(...))``.  Legacy surface:
+    ``train(engine, outer_iters=..., shape=..., eta=..., ...)`` — the
+    keywords are exactly RunConfig's fields.
+    """
+    if run is None:
+        run = RunConfig(shape=shape, **legacy_kw)
+    else:
+        if shape is not None:
+            legacy_kw["shape"] = shape
+        if legacy_kw:
+            run = dataclasses.replace(run, **legacy_kw)
+    return _train(engine, run)
+
+
+def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
     cfg = engine.cfg
     hp = cfg.hsadmm
-    stream = make_stream(cfg, shape, engine.workers)
-    it = prefetch(batches(stream, engine.bundle.extra_inputs, shape))
+    log = run.log
+    stream = make_stream(cfg, run.shape, engine.workers)
+    it = prefetch(batches(stream, engine.bundle.extra_inputs, run.shape))
 
     local_fn = engine.local_step_fn()
     cons_dyn = engine.consensus_step_fn(frozen=False)
@@ -74,30 +143,32 @@ def train(engine: Engine, *, outer_iters: int, shape: ShapeConfig,
 
     state = None
     start_k = 0
-    if ckpt_dir and resume:
-        last = ckpt.latest(ckpt_dir)
+    if run.ckpt_dir and run.resume:
+        last = ckpt.latest(run.ckpt_dir)
         if last is not None:
             tmpl = jax.eval_shape(
-                lambda: engine.init_state_fn()(jax.random.PRNGKey(seed)))
+                lambda: engine.init_state_fn()(jax.random.PRNGKey(run.seed)))
             tmpl = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
             state, meta = ckpt.restore_elastic(last, tmpl, engine.workers)
             start_k = int(meta["step"])
             if log:
                 log(f"[loop] resumed from {last} at outer iter {start_k}")
     if state is None:
-        state = engine.init_state_fn()(jax.random.PRNGKey(seed))
+        state = engine.init_state_fn()(jax.random.PRNGKey(run.seed))
 
-    dense_b, compact_b = comm_volume(engine, False)
+    dense_b, compact_b = comm_volume(engine)
     report = TrainReport()
+    if run.hlo_stats:
+        report.hlo_comm = _hlo_comm_report(engine, state)
     frozen = False
-    for k in range(start_k, outer_iters):
+    for k in range(start_k, run.outer_iters):
         t0 = time.time()
-        if ft_policy is not None:
-            w = ft_policy(k, engine.workers)
+        if run.ft_policy is not None:
+            w = run.ft_policy(k, engine.workers)
             state = dict(state, weights=jnp.asarray(w, jnp.float32))
         loss = None
         for _ in range(hp.local_steps):           # Phase 1
-            state, loss = local_fn(state, next(it), jnp.float32(eta))
+            state, loss = local_fn(state, next(it), jnp.float32(run.eta))
         was_frozen = frozen
         state, info = (cons_frz if frozen else cons_dyn)(state)  # Phases 2-5
         drift = float(sum(np.asarray(v) for k2, v in info.items()
@@ -112,6 +183,8 @@ def train(engine: Engine, *, outer_iters: int, shape: ShapeConfig,
         report.comm_bytes_dense_equiv.append(dense_b)
         report.wall_times.append(time.time() - t0)
         report.outer_iters = k + 1
+        if run.eval_fn is not None:
+            report.evals.append(run.eval_fn(k, state))
 
         if not frozen and (k + 1 >= hp.t_freeze
                            or (k > 2 and drift == 0.0)):
@@ -120,17 +193,20 @@ def train(engine: Engine, *, outer_iters: int, shape: ShapeConfig,
             if log:
                 log(f"[loop] masks frozen at outer iter {k + 1}")
 
-        if log and (k % 5 == 0 or k == outer_iters - 1):
+        if log and (k % 5 == 0 or k == run.outer_iters - 1):
             log(f"[loop] k={k:3d} loss={float(loss):.4f} "
                 f"r={report.r_primal[-1]:.3e} drift={drift:.0f}")
-        if ckpt_dir and (k + 1) % ckpt_every == 0:
-            ckpt.save(ckpt_dir, jax.device_get(state),
+        if run.ckpt_dir and run.ckpt_every > 0 \
+                and (k + 1) % run.ckpt_every == 0:
+            ckpt.save(run.ckpt_dir, jax.device_get(state),
                       {"step": k + 1, "arch": cfg.name,
                        "workers": engine.workers,
                        "levels": list(engine.consensus.levels)},
-                      background=True)
+                      keep=run.ckpt_keep, background=True)
         if not engine.spec.solo and bool(converged(state, info, hp)):
             if log:
                 log(f"[loop] converged at outer iter {k + 1}")
             break
+    if run.ckpt_dir:
+        ckpt.flush()   # background saves are durable once train() returns
     return state, report

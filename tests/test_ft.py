@@ -1,0 +1,56 @@
+"""dist.ft policy semantics: window boundaries, shapes, composition."""
+import numpy as np
+
+from repro.dist import ft
+
+
+def test_fail_window_boundaries():
+    p = ft.fail_window({1: (2, 5)})
+    # half-open [k0, k1): dead at 2,3,4; alive at 1 and 5
+    for k, expect in [(0, 1.0), (1, 1.0), (2, 0.0), (3, 0.0), (4, 0.0),
+                      (5, 1.0), (6, 1.0)]:
+        w = p(k, 4)
+        assert w[1] == expect, (k, w)
+        assert np.all(np.delete(w, 1) == 1.0)
+
+
+def test_policy_shape_and_dtype():
+    for policy in (ft.healthy(), ft.fail_window({0: (0, 3)}),
+                   ft.straggler_decay({2: 0.5}, halflife=4),
+                   ft.constant([0.5, 1.0]),
+                   ft.compose(ft.healthy(), ft.fail_window({1: (1, 2)}))):
+        for W in (1, 2, 8):
+            w = policy(3, W)
+            assert isinstance(w, np.ndarray)
+            assert w.shape == (W,) and w.dtype == np.float32
+
+
+def test_fail_window_ignores_out_of_range_workers():
+    p = ft.fail_window({7: (0, 100)})
+    assert np.all(p(5, 4) == 1.0)   # same policy survives elastic shrink
+
+
+def test_straggler_decay_constant_and_recovering():
+    const = ft.straggler_decay({1: 0.25})
+    assert const(0, 4)[1] == np.float32(0.25)
+    assert const(100, 4)[1] == np.float32(0.25)
+
+    rec = ft.straggler_decay({1: 0.25}, halflife=4)
+    w0, w4, w8 = rec(0, 4)[1], rec(4, 4)[1], rec(8, 4)[1]
+    assert np.isclose(w0, 0.25)
+    assert np.isclose(w4, 1.0 - 0.75 * 0.5)     # one halflife
+    assert np.isclose(w8, 1.0 - 0.75 * 0.25)    # two halflives
+    assert w0 < w4 < w8 < 1.0
+
+
+def test_compose_multiplies_elementwise():
+    p = ft.compose(ft.fail_window({0: (0, 10)}),
+                   ft.straggler_decay({2: 0.5}),
+                   ft.constant([1.0, 0.5, 1.0, 1.0]))
+    w = p(3, 4)
+    np.testing.assert_allclose(w, [0.0, 0.5, 0.5, 1.0])
+    assert w.dtype == np.float32
+
+
+def test_compose_empty_is_healthy():
+    assert np.all(ft.compose()(0, 3) == 1.0)

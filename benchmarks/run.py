@@ -53,6 +53,67 @@ def kernel_rows(quick=False):
     return rows
 
 
+def fused_round_rows(quick=False, reps=8):
+    """Fused round executable vs legacy per-step dispatch, wall-time per
+    outer round on the same engine/model (the acceptance metric for the
+    §4.1.4 execution model: one donated dispatch must not be slower than
+    E local-step jits + a consensus jit)."""
+    from repro.configs import get_config
+    from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build
+    from repro.train.engine import Engine
+    from repro.data.pipeline import batches, superbatches
+    from repro.data.synthetic import make_stream
+
+    E = 4
+    cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+        hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=E,
+                            t_freeze=10_000))
+    shape = ShapeConfig("bench", "train", 32, 8)
+    bundle = build(cfg)
+    eng = Engine(bundle, make_host_mesh(), shape,
+                 consensus=ConsensusSpec(levels=(2, 2),
+                                         compact_from_level=1))
+    stream = make_stream(cfg, shape, eng.workers)
+    sb = next(superbatches(batches(stream, bundle.extra_inputs, shape), E))
+    eta = jnp.float32(1e-3)
+
+    def time_rounds(round_once):
+        state = eng.init_state_fn()(jax.random.PRNGKey(0))
+        state = round_once(state)            # compile
+        jax.block_until_ready(state)
+        ts = []
+        for _ in range(reps):                # median: CPU container noise
+            t0 = time.time()
+            state = round_once(state)
+            jax.block_until_ready(state)
+            ts.append(time.time() - t0)
+        return float(np.median(ts)) * 1e6
+
+    rfn = eng.round_step_fn(frozen=False)
+
+    def fused_once(state):
+        state, _ = rfn(state, sb, eta)
+        return state
+
+    lfn = eng.local_step_fn()
+    cfn = eng.consensus_step_fn(frozen=False)
+    steps = [jax.tree.map(lambda x: x[e], sb) for e in range(E)]
+
+    def legacy_once(state):
+        for b in steps:
+            state, _ = lfn(state, b, eta)
+        state, _ = cfn(state)
+        return state
+
+    us_f = time_rounds(fused_once)
+    us_l = time_rounds(legacy_once)
+    return [("round.fused_us", us_f, f"1 dispatch/round (E={E})"),
+            ("round.legacy_us", us_l,
+             f"{E}+1 dispatches/round; fused_speedup={us_l/us_f:.2f}x")]
+
+
 def main():
     quick = "--quick" in sys.argv
     os.makedirs("experiments/bench", exist_ok=True)
@@ -96,6 +157,7 @@ def main():
         bench("fig12_sparsity_accuracy", F.fig12_sparsity_accuracy,
               lambda o: ",".join(f"keep{k}:loss={v['final_loss']:.2f}"
                                  for k, v in o.items()))
+    rows.extend(fused_round_rows(quick))
     rows.extend(kernel_rows(quick))
 
     print("name,us_per_call,derived")

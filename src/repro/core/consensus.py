@@ -115,11 +115,16 @@ def _solo_prune_step(state: dict, spec: EngineSpec, frozen: bool
     return new_state, info
 
 
-def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False
-                   ) -> tuple[dict, dict]:
+def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
+                   detail: bool = True) -> tuple[dict, dict]:
     """Run Phases 2-5.  ``frozen`` selects the cached-mask fast path
     (paper §4.5: projection degenerates to an elementwise multiply and
-    compact buffer shapes are invariant — one-shot buffers)."""
+    compact buffer shapes are invariant — one-shot buffers).
+
+    ``detail=False`` drops the per-leaf ``r_intra``/``r_inter*`` residual
+    maps from the info dict — the fused round executable returns info as
+    device outputs, and the per-leaf maps would be dead weight on every
+    round (only the scalar residuals feed the stopping rule)."""
     if spec.solo:
         return _solo_prune_step(state, spec, frozen)
     levels = spec.consensus.levels
@@ -265,8 +270,9 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False
             factors[key] = rho_b / new_rho  # scaled-dual rescale (Boyd §3.4.1)
             r_tot = r_tot + jnp.sum(r2)
             s_tot = s_tot + jnp.sum(s2)
-            tag = "r_intra" if b == 0 else f"r_inter{b}"
-            info.setdefault(tag, {})[key] = r_n
+            if detail:
+                tag = "r_intra" if b == 0 else f"r_inter{b}"
+                info.setdefault(tag, {})[key] = r_n
         rho_new.append(unflatten(rho_b_new))
 
         def _rescale(tree):

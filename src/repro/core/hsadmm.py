@@ -17,7 +17,7 @@ group-reshapes align with the mesh device order (prototype-validated).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -259,22 +259,23 @@ def local_step(state: dict, batch, loss_fn: Callable, spec: EngineSpec,
     rho1 = state.get("rho", [None])[0]
 
     def upd(key, th):
+        # the update itself (prox gradient + momentum + SGD step) runs as
+        # one streaming pass through the fused Pallas kernel when the
+        # layout allows (kernels/ops.prox_sgd_update dispatch shim); eta
+        # is cast to th.dtype there — a strong f32 eta would promote the
+        # whole update (and its backward) to f32, 2x HBM
         gg = get_leaf(g, key)
         if spec.solo:
-            gtot = gg
+            zz = uu = r = None
         else:
             zz = get_leaf(z1_w, key)
             uu = get_leaf(u, key)
             r = bcast_rho(get_leaf(rho1, key), th,
                           spec.stack_ndims(key), offset=1)
-            gtot = gg + r * (th - zz.astype(th.dtype) + uu)
-        e = jnp.asarray(eta).astype(th.dtype)  # strong f32 eta would
-        # promote the whole update (and its backward) to f32 — 2x HBM
-        if spec.use_momentum:
-            mm = get_leaf(state["mom"], key)
-            mm = spec.momentum * mm + gtot
-            return th - e * mm, mm
-        return th - e * gtot, None
+        mm = get_leaf(state["mom"], key) if spec.use_momentum else None
+        from ..kernels.ops import prox_sgd_update
+        return prox_sgd_update(th, gg, zz, uu, mm, r, eta,
+                               momentum=spec.momentum)
 
     new_theta, new_mom = {}, {}
     for key in leaf_keys(theta):
@@ -306,3 +307,58 @@ def flatten(params: Params) -> dict:
 
 def unflatten(flat: dict) -> dict:
     return _unflatten(flat)
+
+
+# ---------------------------------------------------------------------------
+# Fused round: E local steps + consensus in ONE trace (paper §4.1.4)
+# ---------------------------------------------------------------------------
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round telemetry as *device* arrays — the training loop drains
+    these asynchronously (no host sync on the hot path)."""
+
+    losses: jnp.ndarray        # (E,) mean-over-workers loss per local step
+    r_primal: jnp.ndarray      # scalar primal residual (Alg. 1 l.29)
+    s_dual: jnp.ndarray        # scalar dual residual
+    drift: jnp.ndarray         # total mask drift (0 once frozen)
+    converged: jnp.ndarray     # bool, paper stopping rule (False in solo)
+    drift_by_rule: dict        # {rule name: scalar drift}
+
+
+def round_metrics(state: dict, info: dict, losses: jnp.ndarray,
+                  spec: EngineSpec) -> RoundMetrics:
+    """Assemble RoundMetrics from a post-consensus state + info dict."""
+    from .residuals import converged as _converged
+    drifts = {r.name: state["masks"][r.name]["drift"]
+              for r in spec.plan.rules}
+    total = sum(drifts.values()) if drifts else jnp.zeros((), jnp.float32)
+    conv = jnp.zeros((), bool) if spec.solo \
+        else _converged(state, info, spec.hp)
+    return RoundMetrics(losses=jnp.atleast_1d(losses),
+                        r_primal=info["r_primal"], s_dual=info["s_dual"],
+                        drift=jnp.asarray(total, jnp.float32),
+                        converged=conv, drift_by_rule=drifts)
+
+
+def round_step(state: dict, superbatch, loss_fn: Callable, spec: EngineSpec,
+               eta, grad_accum: int = 1, frozen: bool = False
+               ) -> tuple[dict, RoundMetrics]:
+    """One full H-SADMM outer round as a single traceable program.
+
+    ``lax.scan``s E local prox-SGD steps over a stacked ``(E, W, ...)``
+    superbatch, then runs the hierarchical consensus (Phases 2-5) inside
+    the same trace — jitted by the engine this is exactly one dispatch
+    per round, with no device->host readback: all telemetry comes back
+    as :class:`RoundMetrics` device arrays.
+    """
+    from .consensus import consensus_step
+
+    def body(st, batch):
+        st, loss = local_step(st, batch, loss_fn, spec, eta,
+                              grad_accum=grad_accum)
+        return st, loss
+
+    state, losses = jax.lax.scan(body, state, superbatch)
+    state, info = consensus_step(state, spec, frozen=frozen, detail=False)
+    return state, round_metrics(state, info, losses, spec)

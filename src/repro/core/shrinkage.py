@@ -157,12 +157,40 @@ def plan_payload_shapes(param_shapes: dict[str, tuple[int, ...]],
 
 
 def plan_bytes(param_shapes: dict[str, tuple[int, ...]], plan: SparsityPlan,
-               budgets: dict[str, int], dtype) -> tuple[int, int]:
+               budgets: dict[str, int], dtype,
+               wire_dtype=None) -> tuple[int, int]:
     """(dense_bytes, compact_bytes) of the inter-node payload over all leaves
     touched by the plan.  Leaves not in any rule are counted at full size in
     both (they still cross the fabric dense, as in the paper: only conv/FFN
-    weights shrink)."""
+    weights shrink).
+
+    ``wire_dtype`` is the *effective* on-the-wire element type when it
+    differs from the accumulation dtype — ``hp.comm_quant == "int8"``
+    ships 1-byte payloads plus one f32 scale per leaf per group member
+    (consensus._wsum_q8), so counting ``param_dtype`` bytes would
+    overstate the top-level exchange 2-4x."""
     compact_shapes = plan_payload_shapes(param_shapes, plan, budgets)
-    dense = sum(leaf_bytes(s, dtype) for s in param_shapes.values())
-    compact = sum(leaf_bytes(s, dtype) for s in compact_shapes.values())
+    wt = wire_dtype or dtype
+    scale = 4 if jnp.dtype(wt) != jnp.dtype(dtype) else 0  # f32 scale/leaf
+    dense = sum(leaf_bytes(s, wt) + scale for s in param_shapes.values())
+    compact = sum(leaf_bytes(s, wt) + scale
+                  for s in compact_shapes.values())
     return dense, compact
+
+
+def mask_sync_bytes(param_shapes: dict[str, tuple[int, ...]],
+                    plan: SparsityPlan,
+                    mode: str = "score_consensus") -> int:
+    """Wire bytes of the Phase-3 mask agreement a DYNAMIC round adds on
+    top of the payload exchange: per rule, the (stack, groups) score
+    tensor (f32, score-consensus) or the mask bitmap (bitwise-or union,
+    Eq. 14).  Frozen rounds skip this entirely — the loop's per-round
+    accounting is derived from which executable actually ran."""
+    total = 0
+    for rule in plan.rules:
+        stack = param_shapes[rule.leaves[0].key][:rule.stack_ndims]
+        n = rule.groups
+        for s in stack:
+            n *= s
+        total += n * 4 if mode == "score_consensus" else (n + 7) // 8
+    return total

@@ -29,6 +29,29 @@ def batches(stream, extra_inputs=(), shape=None, start_step: int = 0
         step += 1
 
 
+def superbatches(it: Iterator, e: int) -> Iterator:
+    """Stack ``e`` consecutive global batches into one ``(E, W, ...)``
+    superbatch — the unit the fused round executable scans over (one
+    bundle per outer round; wrap with :func:`prefetch` so bundle
+    assembly overlaps the previous round's device compute)."""
+    while True:
+        bs = [next(it) for _ in range(e)]
+        yield jax.tree.map(lambda *xs: jax.numpy.stack(xs), *bs)
+
+
+def superbatch_chunks(it: Iterator, e: int, steps: int) -> Iterator:
+    """Steps-bounded :func:`superbatches`: yields ``(n, superbatch)``
+    covering exactly ``steps`` total steps in chunks of ``e`` plus one
+    possibly-shorter tail (at most two distinct leading dims, so a
+    scanned consumer compiles at most twice)."""
+    done = 0
+    while done < steps:
+        n = min(e, steps - done)
+        bs = [next(it) for _ in range(n)]
+        yield n, jax.tree.map(lambda *xs: jax.numpy.stack(xs), *bs)
+        done += n
+
+
 def prefetch(it: Iterator, size: int = 2) -> Iterator:
     """Background-thread prefetch (double buffering by default)."""
     q: queue.Queue = queue.Queue(maxsize=size)

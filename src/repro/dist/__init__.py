@@ -15,15 +15,19 @@ from the optimizer):
   records, mesh-axis/fabric classification, byte aggregation — the
   *measured* counterpart of the analytic ``plan_bytes``,
 * :mod:`repro.dist.hlo_cost` — trip-count-weighted FLOP/byte/collective
-  cost model over the compiled module's call graph.
+  cost model over the compiled module's call graph,
+* :mod:`repro.dist.monitor` — compile/dispatch counters guarding the
+  fused-round "one dispatch per round" invariant.
 """
-from . import checkpoint, ft, hlo, hlo_cost
+from . import checkpoint, ft, hlo, hlo_cost, monitor
 from .hlo import Collective, axis_bytes, collective_stats, internode_bytes, \
     summarize
 from .hlo_cost import WeightedCost, weighted_cost
+from .monitor import CallCounter, compile_count, counting
 
 __all__ = [
-    "checkpoint", "ft", "hlo", "hlo_cost",
+    "checkpoint", "ft", "hlo", "hlo_cost", "monitor",
     "Collective", "axis_bytes", "collective_stats", "internode_bytes",
     "summarize", "WeightedCost", "weighted_cost",
+    "CallCounter", "compile_count", "counting",
 ]

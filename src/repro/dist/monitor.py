@@ -1,0 +1,81 @@
+"""Compilation/dispatch accounting hooks.
+
+The fused-round contract ("one outer round == one jitted dispatch, two
+executables per run") is a perf invariant that silently regresses: an
+accidental host read or a shape change re-introduces per-step dispatch
+without failing any correctness test.  This module gives the test suite
+(and ad-hoc profiling) two cheap counters:
+
+  * :func:`compile_count` — a context manager counting XLA *backend
+    compilations* via ``jax.monitoring`` duration events (one
+    ``/jax/core/compile/backend_compile_duration`` event per executable
+    built, including AOT ``.compile()`` calls);
+  * :func:`counting` — wraps any callable (e.g. an engine's jitted round
+    fn) with an invocation counter, for asserting dispatches-per-round.
+
+jax.monitoring has no listener *removal* API, so one module-level
+listener is installed lazily and kept; nesting/overlap of
+``compile_count`` blocks is safe (each block reads deltas).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+import jax
+
+_EVENT = "/jax/core/compile/backend_compile_duration"
+_totals = {"compiles": 0}
+_installed = False
+
+
+def _on_duration(name: str, duration: float, **kw) -> None:
+    if name == _EVENT:
+        _totals["compiles"] += 1
+
+
+def _ensure_listener() -> None:
+    global _installed
+    if not _installed:
+        jax.monitoring.register_event_duration_secs_listener(_on_duration)
+        _installed = True
+
+
+@dataclass
+class CompileStats:
+    compiles: int = 0
+
+
+@contextlib.contextmanager
+def compile_count():
+    """``with compile_count() as stats: ...`` — afterwards,
+    ``stats.compiles`` is the number of XLA executables built inside the
+    block (jit cache hits and op-by-op dispatches count zero)."""
+    _ensure_listener()
+    start = _totals["compiles"]
+    stats = CompileStats()
+    try:
+        yield stats
+    finally:
+        stats.compiles = _totals["compiles"] - start
+
+
+@dataclass
+class CallCounter:
+    calls: int = 0
+    by_label: dict = field(default_factory=dict)
+
+    def wrap(self, fn, label: str = ""):
+        """Count invocations of ``fn`` (shared counter + per-label)."""
+        def wrapped(*a, **kw):
+            self.calls += 1
+            if label:
+                self.by_label[label] = self.by_label.get(label, 0) + 1
+            return fn(*a, **kw)
+        return wrapped
+
+
+def counting(fn, label: str = "") -> tuple:
+    """(wrapped_fn, CallCounter) for a single callable."""
+    c = CallCounter()
+    return c.wrap(fn, label), c

@@ -27,16 +27,26 @@ def _kernel(theta_ref, g_ref, z_ref, u_ref, mom_ref, out_t_ref, out_m_ref,
     out_t_ref[...] = th - eta * m_new
 
 
-def fused_prox_sgd(theta, g, z, u, mom, *, eta, rho, momentum,
-                   block_r=256, block_c=512, interpret=False):
-    """2D tiles over a (R, C) view; all operands same shape/dtype."""
-    R, C = theta.shape
+def _blocks(R, C, block_r, block_c):
     br = min(block_r, R)
     while R % br:
         br -= 1
     bc = min(block_c, C)
     while C % bc:
         bc -= 1
+    return br, bc
+
+
+def fused_prox_sgd(theta, g, z, u, mom, *, eta, rho, momentum,
+                   block_r=256, block_c=512, interpret=False):
+    """2D tiles over a (R, C) view; all operands same shape/dtype.
+
+    ``eta``/``rho`` are compile-time scalars baked into the kernel; the
+    training hot path (adaptive per-layer penalties, traced step size)
+    uses :func:`fused_prox_sgd_dyn` instead.
+    """
+    R, C = theta.shape
+    br, bc = _blocks(R, C, block_r, block_c)
     grid = (R // br, C // bc)
     bs = pl.BlockSpec((br, bc), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -48,3 +58,37 @@ def fused_prox_sgd(theta, g, z, u, mom, *, eta, rho, momentum,
         out_specs=(bs, bs),
         interpret=interpret,
     )(theta, g, z, u, mom)
+
+
+def _kernel_dyn(theta_ref, g_ref, z_ref, u_ref, mom_ref, rho_ref, eta_ref,
+                out_t_ref, out_m_ref, *, momentum):
+    th = theta_ref[...]
+    gtot = g_ref[...] + rho_ref[...] * (th - z_ref[...] + u_ref[...])
+    m_new = momentum * mom_ref[...] + gtot
+    out_m_ref[...] = m_new
+    out_t_ref[...] = th - eta_ref[0, 0] * m_new
+
+
+def fused_prox_sgd_dyn(theta, g, z, u, mom, rho_col, eta, *, momentum,
+                       block_r=256, block_c=512, interpret=False):
+    """Hot-path variant with *traced* operands: ``rho_col`` is a (R, 1)
+    per-row penalty column (layer-wise adaptive rho, paper §3.4) and
+    ``eta`` a (1, 1) step size — both change every round without
+    recompilation.  Same single streaming pass over the 5 param-sized
+    tensors; rho/eta tiles are negligible extra traffic.
+    """
+    R, C = theta.shape
+    br, bc = _blocks(R, C, block_r, block_c)
+    grid = (R // br, C // bc)
+    bs = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    rs = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
+    es = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel_dyn, momentum=momentum),
+        out_shape=(jax.ShapeDtypeStruct(theta.shape, theta.dtype),
+                   jax.ShapeDtypeStruct(mom.shape, mom.dtype)),
+        grid=grid,
+        in_specs=[bs] * 5 + [rs, es],
+        out_specs=(bs, bs),
+        interpret=interpret,
+    )(theta, g, z, u, mom, rho_col, eta)

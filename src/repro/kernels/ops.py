@@ -7,12 +7,14 @@ assert bit-level agreement with the ref.py oracles either way.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from .compact import gather_groups as _gather
 from .fused_prox_sgd import fused_prox_sgd as _fused
+from .fused_prox_sgd import fused_prox_sgd_dyn as _fused_dyn
 from .group_norms import group_norms_sq as _gnorms
 from .ssd_scan import ssd_chunk_scan as _ssd
 
@@ -21,14 +23,70 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _rc(shape: tuple) -> tuple[int, int]:
+    """(R, C) 2D view of any-rank operand: minor axis stays contiguous;
+    0-D/1-D leaves (biases, scalars) pad to one row."""
+    if len(shape) >= 2:
+        return math.prod(shape[:-1]), shape[-1]
+    return 1, max(math.prod(shape), 1)
+
+
 @functools.partial(jax.jit, static_argnames=("eta", "rho", "momentum"))
 def fused_prox_sgd(theta, g, z, u, mom, *, eta, rho, momentum=0.9):
     shape = theta.shape
-    flat = lambda x: x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    R, C = _rc(shape)
+    flat = lambda x: x.reshape(R, C)
     t, m = _fused(flat(theta), flat(g), flat(z), flat(u), flat(mom),
                   eta=eta, rho=rho, momentum=momentum,
                   interpret=_interpret())
     return t.reshape(shape), m.reshape(shape)
+
+
+def prox_sgd_update(theta, g, z, u, mom, rho, eta, *, momentum=0.9):
+    """Dispatch shim for the Phase-1 update (paper Eq. 8).
+
+    Computes, in one streaming pass when the fused kernel applies:
+
+        g_tot = g + rho * (theta - z + u)     (analytic prox gradient)
+        mom'  = momentum * mom + g_tot
+        theta'= theta - eta * mom'
+
+    ``rho`` is the bcast_rho-shaped layer-wise penalty (or None with z/u
+    None in solo mode), ``eta`` a traced scalar.  Falls back to the jnp
+    reference when an operand is missing (no momentum / no consensus) or
+    when rho varies along the minor axis — the Pallas kernel streams rho
+    as a per-row column.  Returns (theta', mom' or None).
+    """
+    e = jnp.asarray(eta).astype(theta.dtype)
+    has_prox = z is not None
+    rho_t = None
+    if has_prox:
+        rho_t = jnp.asarray(rho).astype(theta.dtype)
+    # kernel streams rho as one value per (R, C)-view row: rho must be
+    # constant along the minor axis (1-D leaves collapse to one row, so
+    # they need a single rho value overall)
+    minor_const = has_prox and theta.ndim >= 1 and (
+        rho_t.ndim == 0 or rho_t.size == 1
+        or (theta.ndim >= 2 and rho_t.shape[-1] == 1))
+    if has_prox and mom is not None and minor_const and theta.size:
+        shape = theta.shape
+        R, C = _rc(shape)
+        flat = lambda x: x.astype(theta.dtype).reshape(R, C)
+        if theta.ndim >= 2:
+            rho_col = jnp.broadcast_to(rho_t, shape[:-1] + (1,))
+        else:  # 1-D leaf viewed as one row: rho is necessarily uniform
+            rho_col = jnp.broadcast_to(rho_t.reshape(-1)[:1], (1, 1))
+        t, m = _fused_dyn(flat(theta), flat(g), flat(z), flat(u), flat(mom),
+                          rho_col.reshape(R, 1), e.reshape(1, 1),
+                          momentum=momentum, interpret=_interpret())
+        return t.reshape(shape), m.reshape(shape)
+    gtot = g
+    if has_prox:
+        gtot = g + rho_t * (theta - z.astype(theta.dtype) + u)
+    if mom is not None:
+        m = momentum * mom + gtot
+        return theta - e * m, m
+    return theta - e * gtot, None
 
 
 @jax.jit

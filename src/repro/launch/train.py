@@ -48,6 +48,13 @@ def main(argv=None):
                     help="j:k0:k1 — fail worker j during [k0,k1)")
     ap.add_argument("--straggler", default=None,
                     help="j:factor[:halflife] — down-weight worker j")
+    ap.add_argument("--legacy-rounds", action="store_true",
+                    help="per-step dispatch instead of the fused round "
+                         "executable (equivalence / dispatch-overhead "
+                         "comparisons)")
+    ap.add_argument("--metrics-every", type=int, default=5,
+                    help="drain the async round-metrics stream every N "
+                         "rounds (fused mode; 1 = sync every round)")
     ap.add_argument("--hlo-stats", action="store_true",
                     help="report the measured collective schedule "
                          "(parsed from the compiled HLO) next to the "
@@ -108,6 +115,8 @@ def main(argv=None):
                         eta=args.eta, ckpt_dir=args.ckpt_dir,
                         ckpt_every=args.ckpt_every, ckpt_keep=args.ckpt_keep,
                         ft_policy=ft.compose(*policies) if policies else None,
+                        fused_rounds=not args.legacy_rounds,
+                        metrics_every=args.metrics_every,
                         hlo_stats=args.hlo_stats)
         _, rep = train(eng, run)
         if rep.hlo_comm:

@@ -23,7 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ConsensusSpec, ShapeConfig
 from ..core.consensus import consensus_step
-from ..core.hsadmm import EngineSpec, init_state, local_step
+from ..core.hsadmm import EngineSpec, init_state, local_step, round_step
 from ..models.api import ModelBundle
 
 
@@ -258,6 +258,24 @@ class Engine:
             return consensus_step(state, self.spec, frozen=frozen)
         return jax.jit(fn, donate_argnums=(0,))
 
+    def round_step_fn(self, frozen: bool):
+        """The fused round executable (paper §4.1.4): E scanned local
+        prox-SGD steps + one hierarchical consensus, one dispatch, state
+        donated, state outputs pinned to the canonical shardings.  The
+        loop holds exactly two of these (dynamic + frozen)."""
+        ga = max(self.cfg.grad_accum, 1)
+        baxis = "data" if self.consensus.granularity == "pod" else None
+
+        def fn(state, superbatch, eta):
+            from ..models import layers as _L
+            _L.set_batch_axis(baxis)   # trace-time activation-layout policy
+            out = round_step(state, superbatch, self.bundle.train_loss,
+                             self.spec, eta, grad_accum=ga, frozen=frozen)
+            _L.set_batch_axis(None)
+            return out
+        return jax.jit(fn, donate_argnums=(0,),
+                       out_shardings=(self.state_shardings(), None))
+
     def init_state_fn(self):
         sh = self.state_shardings()
 
@@ -281,6 +299,40 @@ class Engine:
         hold against the analytic ``plan_bytes`` accounting."""
         from ..dist.hlo_cost import weighted_cost
         txt = self.consensus_hlo(state, frozen=frozen)
+        wc = weighted_cost(txt, model=self.axes.get("model", 1),
+                           data=self.axes.get("data", 1),
+                           node=self.consensus.node_size)
+        return wc.collectives
+
+    def superbatch_struct(self, shape: Optional[ShapeConfig] = None) -> dict:
+        """ShapeDtypeStructs of one fused-round input bundle: per-step
+        batches stacked to a leading E dim (scan axis, unsharded)."""
+        shape = shape or self.shape
+        if shape is None:
+            raise ValueError("engine has no ShapeConfig; pass one")
+        bs = self.bundle.train_inputs(shape, self.workers)
+        e = max(self.cfg.hsadmm.local_steps, 1)
+        bsh = self.batch_sharding(bs)
+        return {k: jax.ShapeDtypeStruct(
+                    (e,) + tuple(v.shape), v.dtype,
+                    sharding=NamedSharding(self.mesh, P(None, *bsh[k].spec)))
+                for k, v in bs.items()}
+
+    def round_hlo(self, frozen: bool = False,
+                  shape: Optional[ShapeConfig] = None) -> str:
+        """Compiled-HLO text of the FUSED round executable (AOT lower +
+        compile from shape structs — no concrete state needed)."""
+        eta = jax.ShapeDtypeStruct((), jnp.float32)
+        return self.round_step_fn(frozen).lower(
+            self.state_struct(), self.superbatch_struct(shape), eta
+        ).compile().as_text()
+
+    def round_collectives(self, frozen: bool = False,
+                          shape: Optional[ShapeConfig] = None):
+        """Trip-weighted collective schedule of one whole fused round —
+        E local steps AND the consensus, as XLA actually scheduled them."""
+        from ..dist.hlo_cost import weighted_cost
+        txt = self.round_hlo(frozen=frozen, shape=shape)
         wc = weighted_cost(txt, model=self.axes.get("model", 1),
                            data=self.axes.get("data", 1),
                            node=self.consensus.node_size)

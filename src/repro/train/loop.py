@@ -1,18 +1,32 @@
 """Orchestration control loop — paper Algorithm 1 / §4.1.4.
 
-Serializes the H-SADMM phases: E local prox-SGD steps -> one consensus
-round (intra-node AllReduce, projection + mask sync, compact inter-node
-AllReduce, duals, adaptive penalties).  Handles:
+The hot path is the FUSED ROUND: one jitted, state-donated executable per
+outer iteration that scans the E local prox-SGD steps over a prefetched
+``(E, W, ...)`` superbatch and runs the hierarchical consensus (intra-node
+AllReduce, projection + mask sync, compact inter-node AllReduce, duals,
+adaptive penalties) inside the same trace.  Exactly two executables exist
+per run — dynamic and frozen (§4.5 one-shot buffers) — and the loop never
+reads the device on the hot path: per-round telemetry comes back as
+:class:`repro.core.hsadmm.RoundMetrics` device arrays and is drained in
+blocks every ``RunConfig.metrics_every`` rounds (plus once at the end).
 
-  * mask freezing (T_freeze OR drift==0 stability detection, §4.5) by
-    switching to the frozen-consensus executable (one-shot buffers),
-  * convergence check on the primal/dual residuals (Alg. 1 l.29),
-  * checkpoint/restart (atomic, background, elastic — dist/checkpoint),
-  * straggler/failure mitigation via the consensus weight vector
-    (dist/ft policies),
-  * communication-volume accounting per phase: the analytic plan_bytes
-    numbers every round, plus (opt-in) the *measured* collective schedule
-    parsed from the compiled HLO (dist/hlo) for the Fig. 5b/6 benchmarks.
+Consequences of the async cadence (all bounded by ``metrics_every``):
+
+  * drift-stability mask freezing (§4.5) and the residual stopping rule
+    (Alg. 1 l.29) take effect at the next drain boundary — ``t_freeze``
+    freezing is host-known and still exact;
+  * ``report`` lists are always fully per-round, whatever the cadence.
+
+``RunConfig(fused_rounds=False)`` keeps the legacy per-step dispatch path
+(E separate local-step jits + a consensus jit, synced every round) for
+equivalence testing and dispatch-overhead benchmarks.
+
+Communication accounting is derived from which executable actually ran
+each round: the per-level compaction boundary (``compact_from_level``),
+the effective wire dtype (``hp.comm_quant`` int8 ships 1-byte payloads +
+scales), and — for dynamic rounds only — the Phase-3 mask-agreement
+bytes.  The measured counterpart (compiled-HLO collective schedule,
+``dist.hlo``) is reported when ``RunConfig.hlo_stats`` is set.
 
 Run parameters live in one :class:`RunConfig`; the legacy keyword surface
 (``train(eng, outer_iters=..., shape=..., ...)``) is a thin wrapper over
@@ -30,10 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ShapeConfig
-from ..core.hsadmm import flatten
-from ..core.residuals import converged
-from ..core.shrinkage import plan_bytes
-from ..data.pipeline import batches, prefetch
+from ..core.hsadmm import flatten, round_metrics
+from ..core.shrinkage import mask_sync_bytes, plan_bytes
+from ..data.pipeline import batches, prefetch, superbatches
 from ..data.synthetic import make_stream
 from ..dist import checkpoint as ckpt
 from ..dist import hlo
@@ -53,6 +66,13 @@ class RunConfig:
     shape: ShapeConfig
     eta: float = 1e-3
     seed: int = 0
+    # fused round executable (one dispatch per round, state donated);
+    # False = legacy per-step dispatch, kept for equivalence tests
+    fused_rounds: bool = True
+    # drain cadence of the async RoundMetrics stream: residuals/drift/loss
+    # are host-read every this many rounds (and at the end), never on the
+    # hot path.  1 = legacy synchronous behaviour.
+    metrics_every: int = 5
     # checkpointing (dist.checkpoint): atomic + background; resume picks
     # up the newest checkpoint elastically (worker count may differ)
     ckpt_dir: Optional[str] = None
@@ -63,8 +83,9 @@ class RunConfig:
     ft_policy: Optional[Callable] = None
     # optional per-iteration evaluation hook: eval_fn(k, state) -> value
     eval_fn: Optional[Callable] = None
-    # parse the compiled consensus executables' collective schedule into
-    # report.hlo_comm (costs two extra AOT compiles; off for tests)
+    # parse the compiled collective schedule of the executables this run
+    # dispatches (fused rounds, or consensus-only under fused_rounds=
+    # False) into report.hlo_comm (two extra AOT compiles; off for tests)
     hlo_stats: bool = False
     log: Optional[Callable] = print
 
@@ -79,6 +100,8 @@ class TrainReport:
     comm_bytes_dense_equiv: list = field(default_factory=list)
     wall_times: list = field(default_factory=list)
     evals: list = field(default_factory=list)
+    # which executable ran each round: "dynamic" | "frozen"
+    executables: list = field(default_factory=list)
     frozen_at: Optional[int] = None
     outer_iters: int = 0
     # measured collective schedule per executable (dist.hlo), keyed
@@ -86,23 +109,71 @@ class TrainReport:
     hlo_comm: Optional[dict] = None
 
 
-def comm_volume(engine: Engine) -> tuple[int, int]:
+def _param_shapes(engine: Engine) -> dict:
+    p0 = jax.eval_shape(engine.bundle.init, jax.random.PRNGKey(0))
+    return {k: tuple(v.shape) for k, v in flatten(p0).items()}
+
+
+def _plan_volume(shapes: dict, engine: Engine,
+                 wire: bool) -> tuple[int, int]:
+    hp = engine.cfg.hsadmm
+    wire_dtype = "int8" if (wire and hp.comm_quant == "int8") else None
+    return plan_bytes(shapes, engine.bundle.plan, engine.spec.budgets,
+                      engine.bundle.cfg.param_dtype, wire_dtype=wire_dtype)
+
+
+def comm_volume(engine: Engine, wire: bool = True) -> tuple[int, int]:
     """(dense, compact) inter-node payload bytes per consensus round, per
-    node — analytic accounting from the sparsity plan.  The measured
-    counterpart (actual XLA schedule) is ``engine.consensus_hlo`` +
-    ``dist.hlo.collective_stats``."""
-    bundle = engine.bundle
-    p0 = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
-    shapes = {k: tuple(v.shape) for k, v in flatten(p0).items()}
-    dtype = bundle.cfg.param_dtype
-    return plan_bytes(shapes, bundle.plan, engine.spec.budgets, dtype)
+    node — analytic accounting from the sparsity plan.  ``wire=True``
+    counts the *effective* wire format (int8 quantization ships 1-byte
+    elements + per-group scales); ``wire=False`` counts param-dtype
+    equivalents.  The measured counterpart (actual XLA schedule) is
+    ``engine.consensus_hlo`` + ``dist.hlo.collective_stats``."""
+    return _plan_volume(_param_shapes(engine), engine, wire)
 
 
-def _hlo_comm_report(engine: Engine, state) -> dict:
-    """Measured per-executable collective schedule (trip-weighted)."""
+def round_comm_bytes(engine: Engine) -> tuple[int, int, int]:
+    """(dense_equiv, dynamic_bytes, frozen_bytes) per round, derived from
+    the executables the loop actually runs — NOT a round-index heuristic:
+
+      * the top-level (slow fabric) boundary ships the statically-compact
+        buffer iff ``compact_from_level`` covers it (it does not in the
+        flat PruneX(AR) ablation, whose payload is honestly dense);
+      * at the int8 wire dtype only when the executable actually
+        quantizes the top boundary (consensus routes through _wsum_q8 at
+        the K-th reduction for K > 1, or at level 1 when it is already
+        compact — the flat K=1, compact_from_level>=1 ablation never
+        quantizes);
+      * dynamic rounds add the Phase-3 mask-agreement bytes; frozen
+        rounds (§4.5) skip mask sync entirely;
+      * solo engines have no consensus exchange at all.
+    """
+    shapes = _param_shapes(engine)
+    dense_eq, _ = _plan_volume(shapes, engine, wire=False)
+    if engine.spec.solo:
+        return dense_eq, 0, 0
+    levels = engine.consensus.levels
+    kc = engine.consensus.compact_from_level
+    quantizes = len(levels) > 1 or kc == 0
+    dense_w, compact_w = _plan_volume(shapes, engine, wire=quantizes)
+    top_compact = (len(levels) - 1) >= kc
+    base = compact_w if top_compact else dense_w
+    mask_b = mask_sync_bytes(shapes, engine.bundle.plan,
+                             engine.cfg.hsadmm.mask_mode)
+    return dense_eq, base + mask_b, base
+
+
+def _hlo_comm_report(engine: Engine, state, run: "RunConfig") -> dict:
+    """Measured collective schedule (trip-weighted) of the executables
+    this run actually dispatches: the FUSED round executables (E local
+    steps + consensus in one program) by default, the consensus-only
+    executables under ``fused_rounds=False``."""
     out = {}
     for name, frozen in (("dynamic", False), ("frozen", True)):
-        colls = engine.consensus_collectives(state, frozen=frozen)
+        if run.fused_rounds:
+            colls = engine.round_collectives(frozen=frozen, shape=run.shape)
+        else:
+            colls = engine.consensus_collectives(state, frozen=frozen)
         out[name] = {
             "summary": hlo.summarize(colls),
             "axis_bytes": hlo.axis_bytes(colls),
@@ -134,12 +205,18 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
     cfg = engine.cfg
     hp = cfg.hsadmm
     log = run.log
+    E = max(hp.local_steps, 1)
     stream = make_stream(cfg, run.shape, engine.workers)
-    it = prefetch(batches(stream, engine.bundle.extra_inputs, run.shape))
-
-    local_fn = engine.local_step_fn()
-    cons_dyn = engine.consensus_step_fn(frozen=False)
-    cons_frz = engine.consensus_step_fn(frozen=True)
+    base_it = batches(stream, engine.bundle.extra_inputs, run.shape)
+    if run.fused_rounds:
+        it = prefetch(superbatches(base_it, E))
+        round_dyn = engine.round_step_fn(frozen=False)
+        round_frz = engine.round_step_fn(frozen=True)
+    else:
+        it = prefetch(base_it)
+        local_fn = engine.local_step_fn()
+        cons_dyn = engine.consensus_step_fn(frozen=False)
+        cons_frz = engine.consensus_step_fn(frozen=True)
 
     state = None
     start_k = 0
@@ -156,57 +233,106 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
     if state is None:
         state = engine.init_state_fn()(jax.random.PRNGKey(run.seed))
 
-    dense_b, compact_b = comm_volume(engine)
+    dense_eq_b, dyn_b, frz_b = round_comm_bytes(engine)
     report = TrainReport()
     if run.hlo_stats:
-        report.hlo_comm = _hlo_comm_report(engine, state)
+        report.hlo_comm = _hlo_comm_report(engine, state, run)
+
     frozen = False
+    stop = False
+    eta = jnp.float32(run.eta)
+    metrics_every = max(run.metrics_every, 1) if run.fused_rounds else 1
+    pending: list = []   # [(k, was_frozen, RoundMetrics-on-device)]
+    t_block = time.time()
+    host_overhead = 0.0  # ckpt/eval host time, excluded from round walls
+
+    def drain():
+        """Read all pending RoundMetrics in one host sync; update the
+        report and the drift-freeze / convergence decisions.  The sync
+        forces every pending round's device compute, so wall time is
+        attributed here: elapsed-since-last-drain (minus measured
+        ckpt/eval host overhead) spread evenly over the drained rounds
+        (async dispatch alone would time ~nothing)."""
+        nonlocal frozen, stop, t_block, host_overhead
+        if not pending:
+            return
+        vals = jax.device_get([m for (_, _, m) in pending])
+        per_round = max(time.time() - t_block - host_overhead, 0.0) \
+            / len(pending)
+        report.wall_times.extend([per_round] * len(pending))
+        for (k, was_frozen, _), m in zip(pending, vals):
+            loss = float(np.reshape(m.losses, -1)[-1])  # last local step
+            drift = 0.0 if was_frozen else float(m.drift)
+            report.losses.append(loss)
+            report.drifts.append(drift)
+            report.r_primal.append(float(m.r_primal))
+            report.s_dual.append(float(m.s_dual))
+            if not frozen and k > 2 and drift == 0.0:
+                frozen = True                       # §4.5 drift stability
+                if report.frozen_at is None:
+                    # first round the FROZEN executable actually runs —
+                    # rounds dispatched between stability and this drain
+                    # ran dynamic, and the report must say so
+                    report.frozen_at = report.outer_iters
+                if log:
+                    log("[loop] masks frozen at outer iter "
+                        f"{report.frozen_at}")
+            if bool(m.converged):
+                stop = True
+                if log:
+                    log(f"[loop] converged at outer iter {k + 1}")
+            if log and (k % 5 == 0 or k == run.outer_iters - 1):
+                log(f"[loop] k={k:3d} loss={loss:.4f} "
+                    f"r={report.r_primal[-1]:.3e} drift={drift:.0f}")
+        pending.clear()
+        host_overhead = 0.0
+        t_block = time.time()
+
     for k in range(start_k, run.outer_iters):
-        t0 = time.time()
         if run.ft_policy is not None:
             w = run.ft_policy(k, engine.workers)
             state = dict(state, weights=jnp.asarray(w, jnp.float32))
-        loss = None
-        for _ in range(hp.local_steps):           # Phase 1
-            state, loss = local_fn(state, next(it), jnp.float32(run.eta))
         was_frozen = frozen
-        state, info = (cons_frz if frozen else cons_dyn)(state)  # Phases 2-5
-        drift = float(sum(np.asarray(v) for k2, v in info.items()
-                          if k2.startswith("drift/"))) if not was_frozen else 0.0
-        report.losses.append(float(loss))
-        report.drifts.append(drift)
-        report.r_primal.append(float(info["r_primal"]))
-        report.s_dual.append(float(info["s_dual"]))
-        # inter-node volume this round: masks live -> compact, else dense
-        report.comm_bytes_internode.append(
-            compact_b if (was_frozen or k > 0) else dense_b)
-        report.comm_bytes_dense_equiv.append(dense_b)
-        report.wall_times.append(time.time() - t0)
+        if run.fused_rounds:
+            state, m = (round_frz if frozen else round_dyn)(
+                state, next(it), eta)
+        else:
+            loss = None
+            for _ in range(E):                      # Phase 1 (legacy path)
+                state, loss = local_fn(state, next(it), eta)
+            state, info = (cons_frz if frozen else cons_dyn)(state)
+            m = round_metrics(state, info, loss, engine.spec)
+        pending.append((k, was_frozen, m))
+        report.executables.append("frozen" if was_frozen else "dynamic")
+        report.comm_bytes_internode.append(frz_b if was_frozen else dyn_b)
+        report.comm_bytes_dense_equiv.append(dense_eq_b)
         report.outer_iters = k + 1
         if run.eval_fn is not None:
+            t_e = time.time()
             report.evals.append(run.eval_fn(k, state))
+            host_overhead += time.time() - t_e
 
-        if not frozen and (k + 1 >= hp.t_freeze
-                           or (k > 2 and drift == 0.0)):
-            frozen = True                           # §4.5 mask freezing
+        if not frozen and k + 1 >= hp.t_freeze:
+            frozen = True                           # §4.5 schedule freezing
             report.frozen_at = k + 1
             if log:
                 log(f"[loop] masks frozen at outer iter {k + 1}")
 
-        if log and (k % 5 == 0 or k == run.outer_iters - 1):
-            log(f"[loop] k={k:3d} loss={float(loss):.4f} "
-                f"r={report.r_primal[-1]:.3e} drift={drift:.0f}")
+        if (k + 1) % metrics_every == 0 or k == run.outer_iters - 1:
+            drain()
         if run.ckpt_dir and run.ckpt_every > 0 \
                 and (k + 1) % run.ckpt_every == 0:
+            drain()   # attribute pending compute before the host transfer
+            t_c = time.time()
             ckpt.save(run.ckpt_dir, jax.device_get(state),
                       {"step": k + 1, "arch": cfg.name,
                        "workers": engine.workers,
                        "levels": list(engine.consensus.levels)},
                       keep=run.ckpt_keep, background=True)
-        if not engine.spec.solo and bool(converged(state, info, hp)):
-            if log:
-                log(f"[loop] converged at outer iter {k + 1}")
+            host_overhead += time.time() - t_c
+        if stop:
             break
+    drain()
     if run.ckpt_dir:
         ckpt.flush()   # background saves are durable once train() returns
     return state, report

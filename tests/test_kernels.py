@@ -9,19 +9,68 @@ from repro.kernels import ops, ref
 from repro.models.ssm import ssd_scan
 
 
-@pytest.mark.parametrize("shape", [(4, 128), (6, 128, 256), (2, 3, 64, 384)])
+@pytest.mark.parametrize("shape", [(4, 128), (6, 128, 256), (2, 3, 64, 384),
+                                   (128,), (7,), ()])
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
 def test_fused_prox_sgd(shape, dtype):
+    # (128,)/(7,)/() regression: 1-D bias vectors and 0-D scalars must pad
+    # to one (1, N) row instead of crashing the 2D reshape
     k = jax.random.PRNGKey(0)
     xs = [jax.random.normal(jax.random.fold_in(k, i), shape).astype(dtype)
           for i in range(5)]
     t, m = ops.fused_prox_sgd(*xs, eta=1e-2, rho=1e-3, momentum=0.9)
+    assert t.shape == shape and m.shape == shape
     tr, mr = ref.fused_prox_sgd_ref(*xs, eta=1e-2, rho=1e-3, momentum=0.9)
     tol = 1e-5 if dtype == "float32" else 2e-2
     np.testing.assert_allclose(np.asarray(t, np.float32),
                                np.asarray(tr, np.float32), rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(m, np.float32),
                                np.asarray(mr, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape,rshape", [
+    ((4, 3, 8, 16), (1, 3, 1, 1)),    # layer-wise adaptive rho
+    ((4, 16), (1, 1)),                # bias-like leaf
+    ((4,), (1,)),                     # 1-D leaf (one padded row)
+    ((4, 3, 8, 16), (1, 3, 1, 16)),   # rho varies on minor axis -> fallback
+    ((8,), (8,)),                     # 1-D leaf, per-element rho -> fallback
+])
+def test_prox_sgd_update_shim(shape, rshape):
+    """The hot-path dispatch shim: traced eta + array rho (the adaptive
+    penalties change every round) must match the inline jnp update."""
+    k = jax.random.PRNGKey(0)
+    xs = [jax.random.normal(jax.random.fold_in(k, i), shape)
+          for i in range(5)]
+    rho = jax.random.uniform(jax.random.fold_in(k, 9), rshape) + 0.1
+    eta = jnp.float32(3e-3)
+    t, m = jax.jit(lambda *a: ops.prox_sgd_update(*a, momentum=0.9))(
+        *xs, rho, eta)
+    gtot = xs[1] + rho * (xs[0] - xs[2] + xs[3])
+    mr = 0.9 * xs[4] + gtot
+    tr = xs[0] - eta * mr
+    np.testing.assert_allclose(np.asarray(t), np.asarray(tr),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_prox_sgd_update_fallbacks():
+    k = jax.random.PRNGKey(1)
+    th, g = (jax.random.normal(jax.random.fold_in(k, i), (4, 8))
+             for i in (0, 1))
+    eta = jnp.float32(1e-2)
+    # solo (no consensus operands): plain SGD
+    t, m = ops.prox_sgd_update(th, g, None, None, None, None, eta)
+    assert m is None
+    np.testing.assert_allclose(np.asarray(t), np.asarray(th - 1e-2 * g),
+                               rtol=1e-6)
+    # momentum-free prox step
+    z, u = th * 0.5, th * 0.1
+    t, m = ops.prox_sgd_update(th, g, z, u, None, jnp.float32(0.3), eta)
+    assert m is None
+    np.testing.assert_allclose(
+        np.asarray(t), np.asarray(th - 1e-2 * (g + 0.3 * (th - z + u))),
+        rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("C,B", [(64, 24), (128, 64), (32, 8)])

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.sparsity import GroupRule, LeafAxis, SparsityPlan, topk_mask
 from repro.core.shrinkage import (compact_leaf, expand_leaf, compact_params,
-                                  expand_params, plan_bytes)
+                                  expand_params, mask_sync_bytes, plan_bytes)
 
 
 @pytest.mark.parametrize("shards", [1, 4])
@@ -33,6 +33,33 @@ def test_plan_bytes_accounting():
     assert dense == (256 + 256 + 800) * 4
     assert compact == (128 + 128 + 800) * 4  # emb stays dense (paper: only
     # structured layers shrink)
+
+
+def test_plan_bytes_int8_wire():
+    """hp.comm_quant == "int8" ships 1-byte elements + one f32 scale per
+    leaf per group member — accounting must use the wire dtype, not
+    param_dtype (which overstated the exchange 4x for f32 models)."""
+    plan = SparsityPlan((GroupRule(
+        "ffn", (LeafAxis("win", 1), LeafAxis("wout", 0)), groups=32,
+        keep=16, stack_ndims=0),))
+    shapes = {"win": (8, 32), "wout": (32, 8), "emb": (100, 8)}
+    dense, compact = plan_bytes(shapes, plan, {"ffn": 16}, "float32",
+                                wire_dtype="int8")
+    assert dense == (256 + 256 + 800) * 1 + 3 * 4     # + scale per leaf
+    assert compact == (128 + 128 + 800) * 1 + 3 * 4
+    # same wire dtype as accumulation dtype: no scale overhead, unchanged
+    d2, c2 = plan_bytes(shapes, plan, {"ffn": 16}, "float32",
+                        wire_dtype="float32")
+    assert (d2, c2) == plan_bytes(shapes, plan, {"ffn": 16}, "float32")
+
+
+def test_mask_sync_bytes_by_mode():
+    plan = SparsityPlan((GroupRule(
+        "ffn", (LeafAxis("win", 2), LeafAxis("wout", 1)), groups=32,
+        keep=16, stack_ndims=1),))
+    shapes = {"win": (3, 8, 32), "wout": (3, 32, 8)}
+    assert mask_sync_bytes(shapes, plan) == 3 * 32 * 4        # f32 scores
+    assert mask_sync_bytes(shapes, plan, "bitwise_or") == (3 * 32 + 7) // 8
 
 
 def test_compose_two_rules_same_leaf():

@@ -1,0 +1,21 @@
+"""repro.comm — one pluggable wire-codec API for every synchronization
+path (CGX-style communication interface; see codec.py).
+
+    from repro.comm import get_codec, compose, level_codecs
+
+    codec = get_codec("compact+q8")
+    reduced, st = codec.group_reduce(tree, g, weights)
+    payload_b = codec.wire_bytes(leaf.shape, leaf.dtype)
+"""
+from .codec import (INDEX_BYTES, CompactMarker, CompositeCodec, DenseCodec,
+                    Q8Codec, TopKCodec, WireCodec, collective_wire_bytes,
+                    compose, get_codec, group_sum, leaf_bytes,
+                    level_codecs, list_codecs, register_codec,
+                    resolve_specs)
+
+__all__ = [
+    "INDEX_BYTES", "CompactMarker", "CompositeCodec", "DenseCodec",
+    "Q8Codec", "TopKCodec", "WireCodec", "collective_wire_bytes",
+    "compose", "get_codec", "group_sum", "leaf_bytes", "level_codecs",
+    "list_codecs", "register_codec", "resolve_specs",
+]

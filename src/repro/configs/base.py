@@ -64,12 +64,16 @@ class HsadmmConfig:
     weight_decay: float = 1e-4    # lambda, applied on consensus z
     eps_abs: float = 1e-4
     eps_rel: float = 1e-3
-    # beyond-paper (§Perf): wire format of the top-level (inter-pod)
-    # compact payload exchange.  "int8" = per-leaf symmetric quantization
-    # exchanged via ring collective-permute, dequant-summed locally —
-    # 2x (bf16 models) / 4x (f32) fewer slow-fabric bytes on top of the
-    # paper's structural shrinkage.  None = dense-dtype AllReduce (paper).
-    comm_quant: str = None
+    # Per-fabric-level wire-codec specs (repro.comm registry: "dense",
+    # "q8", "topk:<rate>", "compact+q8", ...), matching the paper's
+    # leader-follower split: ``wire_intra`` covers the fast intra-node
+    # boundaries, ``wire_inter`` the top (inter-node / slow fabric)
+    # boundary.  None = "dense" (the paper's param-dtype exchange).
+    wire_intra: Optional[str] = None
+    wire_inter: Optional[str] = None
+    # DEPRECATED (one-release shim): legacy wire format of the top-level
+    # exchange; "int8"/"q8" maps to wire_inter="q8".  Use wire_inter.
+    comm_quant: Optional[str] = None
 
 
 @dataclass(frozen=True)

@@ -23,6 +23,13 @@ reduction (used when workers == pods, DESIGN.md §3.2 pod granularity).
 Straggler mitigation / worker failure: ``state["weights"]`` scales each
 worker's contribution (0 = dropped worker); all means are weight-normalized
 so a dead worker never stalls or skews consensus (DESIGN.md §6).
+
+Every group exchange routes through the per-boundary wire codec
+(``repro.comm``, resolved by ``spec.codecs``): the paper's dense
+param-dtype reduce, the beyond-paper int8 ring (``q8``), top-k with
+error feedback (``topk:<rate>``, state threaded through ``state["wire"]``
+across rounds), or structural compaction stacked with any of them
+(``compact+q8``).
 """
 from __future__ import annotations
 
@@ -34,42 +41,6 @@ from .hsadmm import (EngineSpec, bcast_rho, group_sum, leaf_keys,
 from .masks import sync_masks, mask_drift
 from .shrinkage import compact_params, expand_params
 from .sparsity import apply_mask_rule, get_leaf, group_scores
-
-
-def _wsum(tree: dict, g: int, w: jnp.ndarray) -> dict:
-    return jax.tree.map(lambda x: group_sum(x, g, w), tree)
-
-
-def _wsum_q8(tree: dict, g: int, w: jnp.ndarray) -> dict:
-    """Weighted group-sum with an int8 wire format (beyond-paper §Perf).
-
-    Each leaf is scaled per group-member to int8, exchanged across the
-    group via a ring of collective-permutes (jnp.roll over the leading
-    dim), and dequant-accumulated in f32 locally.  Slow-fabric bytes drop
-    2x vs bf16 / 4x vs f32 payloads; quantization error is bounded by
-    max|x|/127 per leaf and is absorbed by the ADMM duals (validated in
-    tests/test_perf_levers.py)."""
-    def one(x):
-        xw = x * w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-        red_axes = tuple(range(1, x.ndim))
-        scale = jnp.max(jnp.abs(xw).astype(jnp.float32), axis=red_axes,
-                        keepdims=True) / 127.0 + 1e-30
-        q = jnp.clip(jnp.round(xw.astype(jnp.float32) / scale),
-                     -127, 127).astype(jnp.int8)
-        G = x.shape[0] // g
-        acc = (q.astype(jnp.float32) * scale)
-        qr, sr = q, scale
-        for _ in range(g - 1):
-            # ring shift WITHIN each contiguous group of g
-            qr = qr.reshape((G, g) + q.shape[1:])
-            sr = sr.reshape((G, g) + scale.shape[1:])
-            qr = jnp.roll(qr, 1, axis=1).reshape(q.shape)
-            sr = jnp.roll(sr, 1, axis=1).reshape(scale.shape)
-            acc = acc + qr.astype(jnp.float32) * sr
-        # every member of a group now holds the group sum
-        out = acc.reshape((G, g) + x.shape[1:])[:, 0]
-        return out.astype(x.dtype)
-    return jax.tree.map(one, tree)
 
 
 def _norm_sq_per_stack(x: jnp.ndarray, stack_ndims: int,
@@ -129,10 +100,26 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
         return _solo_prune_step(state, spec, frozen)
     levels = spec.consensus.levels
     K = len(levels)
-    kc = spec.consensus.compact_from_level
     hp = spec.hp
     plan = spec.plan
     fulls = {r.name: r.groups for r in plan.rules}
+
+    # per-boundary wire codecs (repro.comm) + their error-feedback state
+    codecs = spec.codecs
+    need_wire = any(c.stateful for c in codecs)
+    wire_old = state.get("wire") if need_wire else None
+    wire_new = list(wire_old) if wire_old is not None \
+        else [{} for _ in codecs]
+
+    def wire_reduce(tree: dict, k: int, g: int, w: jnp.ndarray) -> dict:
+        """Boundary-k weighted group exchange in that codec's format."""
+        codec = codecs[k - 1]
+        cst = wire_old[k - 1] if codec.stateful and wire_old is not None \
+            else None
+        red, cst = codec.group_reduce(tree, g, w, cst)
+        if codec.stateful:
+            wire_new[k - 1] = cst
+        return red
 
     theta, u = state["theta"], state["u"]
     w = state["weights"]
@@ -171,20 +158,17 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
                            zs_old[1], vs_old[0])
 
     info: dict = {}
-    if kc == 0:
+    if spec.boundary_compact(1, codecs):
         # masks from per-worker payloads; level-1 reduce is already compact.
         new_masks, idxs, minfo = _make_masks(state, spec, payload0, frozen)
         info.update(minfo)
         pc = compact_params(payload0, plan, idxs, offset=1)
-        if K == 1 and hp.comm_quant == "int8":
-            buf = _wsum_q8(pc, levels[0], w)     # quantized slow fabric
-        else:
-            buf = _wsum(pc, levels[0], w)        # compact collective
+        buf = wire_reduce(pc, 1, levels[0], w)   # compact collective
         z2v_c = compact_params(z2v, plan, idxs, offset=1) if K > 1 else None
         z1c = cand1(buf, z2v_c)
         z1 = expand_params(z1c, plan, idxs, fulls, offset=1)  # recovery
     else:
-        buf = _wsum(payload0, levels[0], w)      # dense intra-node AllReduce
+        buf = wire_reduce(payload0, 1, levels[0], w)  # dense intra AllReduce
         z1t = cand1(buf, z2v)
         new_masks, idxs, minfo = _make_masks(state, spec, z1t, frozen)
         info.update(minfo)
@@ -203,15 +187,12 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
         if k < K:
             zkv = jax.tree.map(lambda zn, vn: ungroup(zn, levels[k]) - vn,
                                zs_old[k], vs_old[k - 1])
-        do_compact = (k - 1) >= kc
+        do_compact = spec.boundary_compact(k, codecs)
         if do_compact:
             payload = compact_params(payload, plan, idxs, offset=1)
             if zkv is not None:
                 zkv = compact_params(zkv, plan, idxs, offset=1)
-        if k == K and hp.comm_quant == "int8":
-            red = _wsum_q8(payload, g, wk[k - 1])   # quantized slow fabric
-        else:
-            red = _wsum(payload, g, wk[k - 1])   # level-k collective
+        red = wire_reduce(payload, k, g, wk[k - 1])  # level-k collective
 
         out = {}
         for key in leaf_keys(red):
@@ -295,4 +276,6 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
     new_state.update(theta=theta, u=u_scaled, z=zs_new, v=vs_scaled,
                      rho=rho_new, masks=new_masks,
                      k=state["k"] + 1)
+    if need_wire:
+        new_state["wire"] = wire_new
     return new_state, info

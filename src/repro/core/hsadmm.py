@@ -17,11 +17,12 @@ group-reshapes align with the mesh device order (prototype-validated).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from ..comm import group_sum   # reference reduction (shared with codecs)
 from ..configs.base import ArchConfig, ConsensusSpec, HsadmmConfig
 from .masks import MaskSyncConfig, budget as rule_budget
 from .sparsity import SparsityPlan, get_leaf
@@ -65,6 +66,24 @@ class EngineSpec:
         return (self.consensus.num_workers == 1
                 and self.consensus.granularity == "pod")
 
+    @property
+    def codecs(self) -> list:
+        """One :class:`repro.comm.WireCodec` per level boundary k=1..K
+        (resolved from hp.wire_intra / hp.wire_inter, legacy comm_quant
+        shimmed) — every consensus exchange routes through these."""
+        from ..comm import level_codecs
+        return level_codecs(self.hp, self.consensus.levels,
+                            self.consensus.compact_from_level)
+
+    def boundary_compact(self, k: int, codecs: list = None) -> bool:
+        """Does boundary k (1..K) ship the physically-shrunk buffer?
+        True when ``compact_from_level`` covers it OR its codec spec
+        carries the ``compact`` marker.  THE predicate — consensus_step,
+        the wire-state init, and the loop accounting all call this."""
+        codecs = codecs if codecs is not None else self.codecs
+        return (k - 1) >= self.consensus.compact_from_level \
+            or codecs[k - 1].compact
+
     def group_sizes(self) -> tuple[int, ...]:
         return self.consensus.levels
 
@@ -102,14 +121,6 @@ def tree_map_leaves(fn: Callable, params: Params) -> Params:
 # ---------------------------------------------------------------------------
 # grouping helpers over the leading consensus dim
 # ---------------------------------------------------------------------------
-
-
-def group_sum(x: jnp.ndarray, g: int, w: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """(G*g, *p) -> (G, *p) sum over contiguous groups of g (optionally
-    weighted by w: (G*g,) broadcast over param dims)."""
-    if w is not None:
-        x = x * w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-    return x.reshape((-1, g) + x.shape[1:]).sum(axis=1)
 
 
 def ungroup(x: jnp.ndarray, g: int) -> jnp.ndarray:
@@ -181,7 +192,41 @@ def init_state(params0: Params, spec: EngineSpec) -> dict:
     state["rho"] = rhos
 
     state["masks"] = _init_masks(params0, spec)
+    codecs = spec.codecs
+    if any(c.stateful for c in codecs):
+        state["wire"] = _init_wire_states(params0, spec, codecs)
     return state
+
+
+def _init_wire_states(params0: Params, spec: EngineSpec, codecs: list
+                      ) -> list:
+    """Per-boundary error-feedback state for stateful wire codecs
+    (repro.comm, e.g. ``topk:<rate>``): one zero tree shaped like the
+    boundary-k payload — leading dim M_{k-1}, leaf shapes compacted when
+    that boundary ships the physically-shrunk buffer.  Stateless
+    boundaries hold an empty subtree so the state pytree structure stays
+    invariant across rounds."""
+    from .shrinkage import plan_payload_shapes
+    levels = spec.consensus.levels
+    keys = leaf_keys(params0)
+    full_shapes = {k: tuple(get_leaf(params0, k).shape) for k in keys}
+    compact_shapes = plan_payload_shapes(full_shapes, spec.plan,
+                                         spec.budgets)
+    out: list = []
+    m = spec.consensus.num_workers
+    for k in range(1, len(levels) + 1):
+        lead, m = m, m // levels[k - 1]
+        codec = codecs[k - 1]
+        if not codec.stateful:
+            out.append({})
+            continue
+        shapes = compact_shapes if spec.boundary_compact(k, codecs) \
+            else full_shapes
+        flat = {key: jnp.zeros((lead,) + shapes[key],
+                               get_leaf(params0, key).dtype)
+                for key in keys}
+        out.append(codec.init_state(_unflatten(flat)))
+    return out
 
 
 def _init_masks(params0: Params, spec: EngineSpec) -> dict:

@@ -134,10 +134,8 @@ def expand_params(params: dict, plan: SparsityPlan, idxs: dict,
 
 
 def leaf_bytes(shape: tuple[int, ...], dtype) -> int:
-    n = 1
-    for s in shape:
-        n *= s
-    return n * jnp.dtype(dtype).itemsize
+    from ..comm import leaf_bytes as _lb   # single source of truth
+    return _lb(shape, dtype)
 
 
 def plan_payload_shapes(param_shapes: dict[str, tuple[int, ...]],
@@ -158,22 +156,33 @@ def plan_payload_shapes(param_shapes: dict[str, tuple[int, ...]],
 
 def plan_bytes(param_shapes: dict[str, tuple[int, ...]], plan: SparsityPlan,
                budgets: dict[str, int], dtype,
-               wire_dtype=None) -> tuple[int, int]:
+               wire_dtype=None, codec=None) -> tuple[int, int]:
     """(dense_bytes, compact_bytes) of the inter-node payload over all leaves
     touched by the plan.  Leaves not in any rule are counted at full size in
     both (they still cross the fabric dense, as in the paper: only conv/FFN
     weights shrink).
 
-    ``wire_dtype`` is the *effective* on-the-wire element type when it
-    differs from the accumulation dtype — ``hp.comm_quant == "int8"``
-    ships 1-byte payloads plus one f32 scale per leaf per group member
-    (consensus._wsum_q8), so counting ``param_dtype`` bytes would
-    overstate the top-level exchange 2-4x."""
+    ``codec`` (a ``repro.comm`` WireCodec or spec string) supplies the
+    per-leaf byte model — its ``wire_bytes`` is the single source of
+    truth shared with ``round_comm_bytes`` and the dryrun/hlo reports.
+    ``wire_dtype`` is the legacy shim: an ``"int8"`` wire dtype that
+    differs from the accumulation dtype selects the ``q8`` codec (1-byte
+    payloads + one f32 scale per leaf per group member)."""
+    from ..comm import get_codec
+    if codec is None:
+        if wire_dtype is None or jnp.dtype(wire_dtype) == jnp.dtype(dtype):
+            codec = get_codec("dense")
+        elif jnp.dtype(wire_dtype) == jnp.dtype(jnp.int8):
+            codec = get_codec("q8")
+        else:
+            raise ValueError(
+                f"legacy wire_dtype={wire_dtype!r} has no codec mapping; "
+                "pass codec= (a repro.comm spec) instead")
+    else:
+        codec = get_codec(codec)
     compact_shapes = plan_payload_shapes(param_shapes, plan, budgets)
-    wt = wire_dtype or dtype
-    scale = 4 if jnp.dtype(wt) != jnp.dtype(dtype) else 0  # f32 scale/leaf
-    dense = sum(leaf_bytes(s, wt) + scale for s in param_shapes.values())
-    compact = sum(leaf_bytes(s, wt) + scale
+    dense = sum(codec.wire_bytes(s, dtype) for s in param_shapes.values())
+    compact = sum(codec.wire_bytes(s, dtype)
                   for s in compact_shapes.values())
     return dense, compact
 

@@ -221,8 +221,9 @@ def restore_elastic(path: str, template: Any,
 
     * ``theta`` / ``z``  — surviving rows copied; new rows seeded from the
       global consensus ``z`` for the same parameter leaf (warm start),
-    * ``mom`` / ``u`` / ``v`` — surviving rows copied; new rows zero
-      (fresh duals/momentum for fresh workers),
+    * ``mom`` / ``u`` / ``v`` / ``wire`` — surviving rows copied; new
+      rows zero (fresh duals/momentum/codec error-feedback for fresh
+      workers; ``wire`` also zero-seeds when the save predates the codec),
     * ``weights`` — new rows 1.0 (a joining worker is healthy until a
       policy says otherwise),
     * ``rho`` — per-level penalties are worker-count independent; a level
@@ -238,7 +239,10 @@ def restore_elastic(path: str, template: Any,
         if group in ("theta", "z") and rest in gz:
             return np.broadcast_to(gz[rest], leaf.shape[1:]).astype(
                 np.asarray(leaf).dtype)
-        if group in ("mom", "u", "v"):
+        if group in ("mom", "u", "v", "wire"):
+            # wire: codec error-feedback residual (repro.comm) — zero for
+            # new members / codec changes (an optimization residual, not
+            # algorithm state)
             return np.zeros(leaf.shape[1:], np.asarray(leaf).dtype)
         if group == "weights":
             return np.ones(leaf.shape[1:], np.float32) \

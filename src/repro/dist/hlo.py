@@ -200,17 +200,9 @@ def _classify(groups: list[list[int]], model: int, data: int, node: int
 
 
 def _wire_bytes(kind: str, g: int, operand_b: int, result_b: int) -> float:
-    if g <= 1:
-        return 0.0
-    if kind == "all-reduce":
-        return 2.0 * (g - 1) / g * operand_b
-    if kind == "all-gather":
-        return float((g - 1) * operand_b)
-    if kind == "reduce-scatter":
-        return (g - 1) / g * operand_b
-    if kind in ("all-to-all", "ragged-all-to-all"):
-        return (g - 1) / g * operand_b
-    return float(operand_b)   # permute / broadcast: one shard over the wire
+    # ring model shared with the analytic accounting (repro.comm)
+    from ..comm import collective_wire_bytes
+    return collective_wire_bytes(kind, g, operand_b)
 
 
 def _permute_groups(attrs: str) -> list[list[int]]:

@@ -66,7 +66,8 @@ def _sds(shape, dtype, sharding):
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              frozen: bool = False, mask_mode: str = None,
              keep_rate: float = None, compact: bool = True,
-             smoke: bool = False, comm_quant: str = None) -> dict:
+             smoke: bool = False, comm_quant: str = None,
+             wire_intra: str = None, wire_inter: str = None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     model_sz, data_sz = axes["model"], axes["data"]
@@ -76,8 +77,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         hp = __import__("dataclasses").replace(hp, mask_mode=mask_mode)
     if keep_rate is not None:
         hp = __import__("dataclasses").replace(hp, keep_rate=keep_rate)
-    if comm_quant:
+    if comm_quant:   # deprecated alias of --wire-inter q8
         hp = __import__("dataclasses").replace(hp, comm_quant=comm_quant)
+    if wire_intra:
+        hp = __import__("dataclasses").replace(hp, wire_intra=wire_intra)
+    if wire_inter:
+        hp = __import__("dataclasses").replace(hp, wire_inter=wire_inter)
     cfg = cfg.replace(hsadmm=hp)
     bundle = build(cfg)
     shape = SHAPES[shape_name]
@@ -176,7 +181,12 @@ def main(argv=None):
     ap.add_argument("--dense", action="store_true",
                     help="disable compaction (dense-baseline ablation)")
     ap.add_argument("--quant", default=None,
-                    help="inter-pod wire format (int8)")
+                    help="DEPRECATED alias of --wire-inter q8 "
+                         "(inter-pod wire format, int8)")
+    ap.add_argument("--wire-intra", default=None,
+                    help="intra-node wire codec spec (repro.comm)")
+    ap.add_argument("--wire-inter", default=None,
+                    help="top-boundary wire codec spec (repro.comm)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--subprocess", action="store_true",
@@ -204,7 +214,9 @@ def main(argv=None):
                         cmd.append("--multi-pod")
                     for flag, val in [("--mask-mode", args.mask_mode),
                                       ("--keep-rate", args.keep_rate),
-                                      ("--quant", args.quant)]:
+                                      ("--quant", args.quant),
+                                      ("--wire-intra", args.wire_intra),
+                                      ("--wire-inter", args.wire_inter)]:
                         if val is not None:
                             cmd += [flag, str(val)]
                     for flag, on in [("--frozen", args.frozen),
@@ -228,7 +240,9 @@ def main(argv=None):
                                    keep_rate=args.keep_rate,
                                    compact=not args.dense,
                                    smoke=args.smoke,
-                                   comm_quant=args.quant)
+                                   comm_quant=args.quant,
+                                   wire_intra=args.wire_intra,
+                                   wire_inter=args.wire_inter)
                     rec["wall_s"] = round(time.time() - t0, 1)
                     with open(path, "w") as f:
                         json.dump(rec, f, indent=1)

@@ -32,6 +32,26 @@ def prune_params_compact(bundle, params):
     return compact, masks
 
 
+def pruned_serving_bundle(bundle, params):
+    """The ``--pruned`` serving mode as a function: project + compact the
+    params and rebuild the model at the reduced width so GEMMs run at the
+    compact size (paper Table 1, last column).  FFN-family rules shrink
+    the config's ``d_ff`` to the FIRST ``ffn*`` rule's keep budget (they
+    all share the hidden width).  Returns (pruned bundle, compact
+    params, masks)."""
+    import dataclasses
+
+    from ..models import build
+    compact, masks = prune_params_compact(bundle, params)
+    new_cfg = bundle.cfg
+    ffn = next((r for r in bundle.plan.rules if r.name.startswith("ffn")),
+               None)
+    if ffn is not None:
+        new_cfg = new_cfg.replace(d_ff=ffn.keep)   # width-shrink branch
+    bundle2 = dataclasses.replace(build(new_cfg), cfg=new_cfg)
+    return bundle2, compact, masks
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -48,20 +68,8 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     params = bundle.init(key)
     if args.pruned:
-        # shrink FFN-family rules (whole-axis slices); serve with the
-        # compact config so GEMMs run at the reduced width
-        import dataclasses
-        compact, _ = prune_params_compact(bundle, params)
-        new_cfg = cfg
-        names = [r.name for r in bundle.plan.rules]
-        if any(n.startswith("ffn") for n in names):
-            rule = next(r for r in bundle.plan.rules
-                        if r.name.startswith("ffn"))
-            new_cfg = new_cfg.replace(d_ff=rule.keep)
-        bundle2 = build(new_cfg)
-        params = compact
-        bundle = dataclasses.replace(bundle2, cfg=new_cfg)
-        print(f"[serve] pruned model: d_ff -> {new_cfg.d_ff}")
+        bundle, params, _ = pruned_serving_bundle(bundle, params)
+        print(f"[serve] pruned model: d_ff -> {bundle.cfg.d_ff}")
 
     B, P, G = args.batch, args.prompt_len, args.gen
     S = P + G

@@ -38,6 +38,13 @@ def main(argv=None):
     ap.add_argument("--eta", type=float, default=1e-3)
     ap.add_argument("--keep-rate", type=float, default=None)
     ap.add_argument("--mask-mode", default=None)
+    ap.add_argument("--wire-intra", default=None, metavar="CODEC",
+                    help="wire codec of the intra-node boundaries "
+                         "(repro.comm spec: dense | q8 | topk:<rate> | "
+                         "compact+q8)")
+    ap.add_argument("--wire-inter", default=None, metavar="CODEC",
+                    help="wire codec of the top inter-node (slow fabric) "
+                         "boundary; also applied to --baseline trainers")
     ap.add_argument("--baseline", default=None, choices=["ddp", "topk"])
     ap.add_argument("--flat", action="store_true",
                     help="PruneX (AR) flat-consensus ablation")
@@ -69,6 +76,10 @@ def main(argv=None):
         hp = dataclasses.replace(hp, keep_rate=args.keep_rate)
     if args.mask_mode:
         hp = dataclasses.replace(hp, mask_mode=args.mask_mode)
+    if args.wire_intra:
+        hp = dataclasses.replace(hp, wire_intra=args.wire_intra)
+    if args.wire_inter:
+        hp = dataclasses.replace(hp, wire_inter=args.wire_inter)
     cfg = cfg.replace(hsadmm=hp)
     bundle = build(cfg)
     shape = SHAPES[args.shape] if args.shape else ShapeConfig(
@@ -77,11 +88,13 @@ def main(argv=None):
     if args.baseline == "ddp":
         _, rep = baselines.ddp_train(bundle, args.workers, shape,
                                      steps=args.outer_iters * hp.local_steps,
-                                     eta=args.eta, log=print)
+                                     eta=args.eta, log=print,
+                                     codec=args.wire_inter or "dense")
     elif args.baseline == "topk":
         _, rep = baselines.topk_train(bundle, args.workers, shape,
                                       steps=args.outer_iters * hp.local_steps,
-                                      eta=args.eta, log=print)
+                                      eta=args.eta, log=print,
+                                      codec=args.wire_inter)
     else:
         mesh = make_host_mesh()
         W = args.workers

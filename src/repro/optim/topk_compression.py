@@ -3,14 +3,23 @@
 fraction of gradient entries by magnitude per leaf; the residual
 accumulates locally (error feedback).  The exchanged representation is
 values+indices (unstructured!) — the byte accounting reflects the index
-metadata overhead the paper criticizes (Table 1): 4 bytes of index per
-value, and AllGather semantics (per-worker supports differ, so a dense
-AllReduce cannot be used — exactly the paper's argument).
+metadata overhead the paper criticizes (Table 1): 4 bytes of int32 index
+plus the *wire dtype's* value width per entry (bf16 values count 2+4,
+f32 4+4), and AllGather semantics (per-worker supports differ, so a
+dense AllReduce cannot be used — exactly the paper's argument).
+
+The system-level exchange now lives in :mod:`repro.comm` as the
+``topk:<rate>`` :class:`~repro.comm.WireCodec` (which the baselines and
+the consensus boundaries route through); this module keeps the
+per-worker functional form and delegates its byte accounting to the
+codec so there is one formula.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from ..comm import TopKCodec
 
 
 def topk_compress_state(params):
@@ -35,6 +44,7 @@ def topk_grad_exchange(grads, err, rate=0.01, axis_sum=None):
     ``axis_sum(x)`` performs the cross-worker mean of the sparsified dense
     tensors (the simulation of the AllGather-and-sum exchange).
     """
+    codec = TopKCodec(rate)
     sparse, new_err, payload = {}, {}, 0
     flat_g = jax.tree_util.tree_leaves_with_path(grads)
     flat_e = jax.tree.leaves(err)
@@ -43,7 +53,8 @@ def topk_grad_exchange(grads, err, rate=0.01, axis_sum=None):
         s, ne, k = _leaf_topk(g, e, rate)
         out_s.append(s)
         out_e.append(ne)
-        payload += k * (4 + 4)  # value + index metadata (paper Table 1)
+        # value (wire dtype width) + index metadata (paper Table 1)
+        payload += codec.wire_bytes(tuple(g.shape), g.dtype)
     treedef = jax.tree.structure(grads)
     sparse = jax.tree.unflatten(treedef, out_s)
     new_err = jax.tree.unflatten(treedef, out_e)

@@ -2,8 +2,14 @@
 gradient compression — both expressed in the same leading-worker-dim layout
 so communication byte accounting is directly comparable to H-SADMM.
 
-Both trainers run the same FUSED-ROUND shape as the H-SADMM loop: a round
-of ``round_steps`` SGD steps is one jitted, state-donated executable that
+Both are the SAME trainer (:func:`codec_train`) with a different
+:class:`repro.comm.WireCodec`: the per-step gradient exchange and the
+byte accounting route through the codec, exactly like the H-SADMM
+consensus boundaries do — ``ddp_train``/``topk_train`` are thin shims
+keeping their historical keyword surfaces.
+
+Both run the same FUSED-ROUND shape as the H-SADMM loop: a round of
+``round_steps`` SGD steps is one jitted, state-donated executable that
 ``lax.scan``s over a stacked ``(E, W, ...)`` superbatch, with per-step
 losses returned as a device array and drained once per round.  The Fig. 5b
 comparison therefore measures the *algorithms* (bytes moved, steps to
@@ -18,11 +24,11 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from ..comm import WireCodec, get_codec
 from ..configs.base import ShapeConfig
 from ..core.hsadmm import flatten, tree_map_leaves
 from ..data.pipeline import batches, prefetch, superbatch_chunks
 from ..data.synthetic import make_stream
-from ..optim.topk_compression import topk_grad_exchange
 
 
 @dataclass
@@ -36,11 +42,26 @@ def _param_bytes(params) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
 
 
-def ddp_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
-              eta=1e-3, momentum=0.9, seed=0, round_steps: int = 8,
-              log=None):
-    """Dense synchronous DDP: per-step gradient mean over all workers
-    (ring AllReduce semantics).  Inter-node bytes/step = full param size."""
+def step_wire_bytes(codec: WireCodec, params, workers: int) -> int:
+    """Inter-node bytes one SGD step moves under ``codec``: per-leaf
+    ``wire_bytes`` (value width from the leaf's dtype — bf16 top-k
+    entries count 2+4, not 4+4), times the worker count for AllGather
+    codecs (per-member supports differ, so every worker's payload
+    traverses the fabric — the paper's Table 1 metadata criticism)."""
+    per = sum(codec.wire_bytes(tuple(x.shape), x.dtype)
+              for x in jax.tree.leaves(params))
+    return per * (workers if codec.gather else 1)
+
+
+def codec_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
+                codec: "WireCodec | str" = "dense", eta=1e-3, momentum=0.9,
+                seed=0, round_steps: int = 8, log=None, tag: str = None):
+    """Synchronous data-parallel SGD whose per-step gradient mean is
+    exchanged through a :class:`repro.comm.WireCodec` (dense AllReduce,
+    q8 ring, top-k + error feedback, ...).  Stateful codecs thread their
+    error-feedback state through the scanned round and across rounds."""
+    codec = get_codec(codec)
+    tag = tag or codec.name
     cfg = bundle.cfg
     key = jax.random.PRNGKey(seed)
     p0 = bundle.init(key)
@@ -48,32 +69,36 @@ def ddp_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
     params = tree_map_leaves(lambda _, x: jnp.broadcast_to(
         x, (W,) + x.shape), p0)
     mom = jax.tree.map(jnp.zeros_like, params)
+    wire = codec.init_state(params) if codec.stateful else {}
     stream = make_stream(cfg, shape, W)
     it = prefetch(batches(stream, bundle.extra_inputs, shape))
+    inv_w = jnp.float32(1.0 / W)
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def round_fn(params, mom, superbatch):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def round_fn(params, mom, wire, superbatch):
         def body(carry, batch):
-            params, mom = carry
+            params, mom, wire = carry
             losses, g = jax.vmap(jax.value_and_grad(bundle.train_loss))(
                 params, batch)
-            g = jax.tree.map(lambda x: jnp.broadcast_to(
-                x.mean(0, keepdims=True), x.shape), g)    # AllReduce mean
+            red, wire = codec.group_reduce(g, W, state=wire)
+            g = jax.tree.map(   # mean over workers, rebroadcast
+                lambda r, x: jnp.broadcast_to(
+                    r * inv_w.astype(r.dtype), x.shape), red, g)
             mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
             params = jax.tree.map(
                 lambda p, m: p - jnp.asarray(eta).astype(p.dtype) * m,
                 params, mom)
-            return (params, mom), losses.mean()
-        (params, mom), losses = jax.lax.scan(body, (params, mom),
-                                             superbatch)
-        return params, mom, losses
+            return (params, mom, wire), losses.mean()
+        (params, mom, wire), losses = jax.lax.scan(
+            body, (params, mom, wire), superbatch)
+        return params, mom, wire, losses
 
     rep = BaselineReport()
-    pbytes = _param_bytes(p0)
+    pbytes = step_wire_bytes(codec, p0, W)
     s = 0
     for n, sb in superbatch_chunks(it, max(round_steps, 1), steps):
         t0 = time.time()
-        params, mom, losses = round_fn(params, mom, sb)
+        params, mom, wire, losses = round_fn(params, mom, wire, sb)
         losses = jax.device_get(losses)       # forces the round's compute
         dt = (time.time() - t0) / n
         for l in losses:
@@ -81,64 +106,31 @@ def ddp_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
             rep.comm_bytes_internode.append(pbytes)
             rep.wall_times.append(dt)
         if log and (s // 20) != ((s + n) // 20):
-            log(f"[ddp] step={s + n - 1} loss={rep.losses[-1]:.4f}")
+            log(f"[{tag}] step={s + n - 1} loss={rep.losses[-1]:.4f}")
         s += n
     return jax.tree.map(lambda x: x[0], params), rep
+
+
+def ddp_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
+              eta=1e-3, momentum=0.9, seed=0, round_steps: int = 8,
+              log=None, codec: "WireCodec | str" = "dense"):
+    """Dense synchronous DDP: per-step gradient mean over all workers
+    (ring AllReduce semantics).  Inter-node bytes/step = full param size.
+    ``codec`` swaps the wire format (kept "dense" for the paper row)."""
+    return codec_train(bundle, workers, shape, steps=steps, codec=codec,
+                       eta=eta, momentum=momentum, seed=seed,
+                       round_steps=round_steps, log=log, tag="ddp")
 
 
 def topk_train(bundle, workers: int, shape: ShapeConfig, *, steps: int,
                rate=0.01, eta=1e-3, momentum=0.9, seed=0,
-               round_steps: int = 8, log=None):
-    """Top-K (rate=0.01 = top 1%, the paper's setting) with error feedback."""
-    cfg = bundle.cfg
-    key = jax.random.PRNGKey(seed)
-    p0 = bundle.init(key)
-    W = workers
-    params = tree_map_leaves(lambda _, x: jnp.broadcast_to(
-        x, (W,) + x.shape), p0)
-    mom = jax.tree.map(jnp.zeros_like, params)
-    err = tree_map_leaves(lambda _, x: jnp.zeros((W,) + x.shape), p0)
-    stream = make_stream(cfg, shape, W)
-    it = prefetch(batches(stream, bundle.extra_inputs, shape))
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-    def round_fn(params, mom, err, superbatch):
-        def body(carry, batch):
-            params, mom, err = carry
-            losses, g = jax.vmap(jax.value_and_grad(bundle.train_loss))(
-                params, batch)
-
-            def worker_fn(gw, ew):
-                s, ne, _ = topk_grad_exchange(gw, ew, rate)
-                return s, ne
-            sparse, err = jax.vmap(worker_fn)(g, err)
-            g = jax.tree.map(lambda x: jnp.broadcast_to(
-                x.mean(0, keepdims=True), x.shape), sparse)  # AllGather+sum
-            mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
-            params = jax.tree.map(
-                lambda p, m: p - jnp.asarray(eta).astype(p.dtype) * m,
-                params, mom)
-            return (params, mom, err), losses.mean()
-        (params, mom, err), losses = jax.lax.scan(body, (params, mom, err),
-                                                  superbatch)
-        return params, mom, err, losses
-
-    rep = BaselineReport()
-    n_params = sum(x.size for x in jax.tree.leaves(p0))
-    # values + int32 indices, AllGather: every worker's payload traverses
-    # the fabric (the paper's Table 1 metadata-overhead criticism)
-    payload = int(n_params * rate) * 8 * W
-    s = 0
-    for n, sb in superbatch_chunks(it, max(round_steps, 1), steps):
-        t0 = time.time()
-        params, mom, err, losses = round_fn(params, mom, err, sb)
-        losses = jax.device_get(losses)       # forces the round's compute
-        dt = (time.time() - t0) / n
-        for l in losses:
-            rep.losses.append(float(l))
-            rep.comm_bytes_internode.append(payload)
-            rep.wall_times.append(dt)
-        if log and (s // 20) != ((s + n) // 20):
-            log(f"[topk] step={s + n - 1} loss={rep.losses[-1]:.4f}")
-        s += n
-    return jax.tree.map(lambda x: x[0], params), rep
+               round_steps: int = 8, log=None,
+               codec: "WireCodec | str" = None):
+    """Top-K (rate=0.01 = top 1%, the paper's setting) with error
+    feedback — the ``topk:<rate>`` codec: values + int32 indices,
+    AllGather semantics, residual accumulated locally.  An explicit
+    ``codec`` overrides the rate-derived one."""
+    return codec_train(bundle, workers, shape, steps=steps,
+                       codec=codec or f"topk:{rate}", eta=eta,
+                       momentum=momentum, seed=seed,
+                       round_steps=round_steps, log=log, tag="topk")

@@ -104,6 +104,21 @@ class Engine:
         self.param_specs_flat = _flat_specs(bundle.param_specs)
         self._shardings = None
 
+    def with_wire(self, intra: Optional[str] = None,
+                  inter: Optional[str] = None) -> "Engine":
+        """A new Engine whose consensus exchanges run through the given
+        ``repro.comm`` codec specs (None keeps the config's choice) —
+        same bundle, mesh, hierarchy; fresh jit/sharding caches."""
+        import dataclasses
+        hp = self.cfg.hsadmm
+        hp = dataclasses.replace(
+            hp, wire_intra=intra if intra is not None else hp.wire_intra,
+            wire_inter=inter if inter is not None else hp.wire_inter)
+        bundle = dataclasses.replace(self.bundle,
+                                     cfg=self.cfg.replace(hsadmm=hp))
+        return Engine(bundle, self.mesh, self.shape,
+                      consensus=self.consensus, extra_fsdp=self.extra_fsdp)
+
     # ------------------------------------------------------------------ #
     # sharding construction
     # ------------------------------------------------------------------ #
@@ -194,6 +209,14 @@ class Engine:
                             entries[best] = ax
                             used = used | {ax}
                 return NamedSharding(self.mesh, P(lead, *entries))
+            if group == "wire":
+                # wire-codec error-feedback state (repro.comm): shaped
+                # like the boundary payload — shard the lead consensus
+                # dim when it maps onto a mesh axis, replicate the
+                # (possibly compacted) param dims
+                lead = self._lead_spec(leaf.shape[0])
+                return NamedSharding(
+                    self.mesh, P(lead, *([None] * (leaf.ndim - 1))))
             if group == "masks" and parts[-1] in ("idx", "valid") \
                     and leaf.ndim >= 2 \
                     and leaf.shape[-2] == self.axes.get("model", 0):

@@ -22,11 +22,13 @@ Consequences of the async cadence (all bounded by ``metrics_every``):
 equivalence testing and dispatch-overhead benchmarks.
 
 Communication accounting is derived from which executable actually ran
-each round: the per-level compaction boundary (``compact_from_level``),
-the effective wire dtype (``hp.comm_quant`` int8 ships 1-byte payloads +
-scales), and — for dynamic rounds only — the Phase-3 mask-agreement
-bytes.  The measured counterpart (compiled-HLO collective schedule,
-``dist.hlo``) is reported when ``RunConfig.hlo_stats`` is set.
+each round: the per-level compaction boundary (``compact_from_level`` or
+the codec's ``compact`` marker), the top boundary's wire codec
+(``repro.comm`` — ``WireCodec.wire_bytes`` is the one formula shared
+with ``plan_bytes`` and the dryrun reports), and — for dynamic rounds
+only — the Phase-3 mask-agreement bytes.  The measured counterpart
+(compiled-HLO collective schedule, ``dist.hlo``) is reported when
+``RunConfig.hlo_stats`` is set.
 
 Run parameters live in one :class:`RunConfig`; the legacy keyword surface
 (``train(eng, outer_iters=..., shape=..., ...)``) is a thin wrapper over
@@ -87,6 +89,11 @@ class RunConfig:
     # dispatches (fused rounds, or consensus-only under fused_rounds=
     # False) into report.hlo_comm (two extra AOT compiles; off for tests)
     hlo_stats: bool = False
+    # per-fabric-level wire-codec specs (repro.comm registry).  When set
+    # they override the engine config's hsadmm.wire_intra/wire_inter for
+    # this run (the loop rebuilds the engine spec around them).
+    wire_intra: Optional[str] = None
+    wire_inter: Optional[str] = None
     log: Optional[Callable] = print
 
 
@@ -114,22 +121,23 @@ def _param_shapes(engine: Engine) -> dict:
     return {k: tuple(v.shape) for k, v in flatten(p0).items()}
 
 
-def _plan_volume(shapes: dict, engine: Engine,
-                 wire: bool) -> tuple[int, int]:
-    hp = engine.cfg.hsadmm
-    wire_dtype = "int8" if (wire and hp.comm_quant == "int8") else None
+def _plan_volume(shapes: dict, engine: Engine, codec) -> tuple[int, int]:
     return plan_bytes(shapes, engine.bundle.plan, engine.spec.budgets,
-                      engine.bundle.cfg.param_dtype, wire_dtype=wire_dtype)
+                      engine.bundle.cfg.param_dtype, codec=codec)
 
 
 def comm_volume(engine: Engine, wire: bool = True) -> tuple[int, int]:
     """(dense, compact) inter-node payload bytes per consensus round, per
-    node — analytic accounting from the sparsity plan.  ``wire=True``
-    counts the *effective* wire format (int8 quantization ships 1-byte
-    elements + per-group scales); ``wire=False`` counts param-dtype
-    equivalents.  The measured counterpart (actual XLA schedule) is
-    ``engine.consensus_hlo`` + ``dist.hlo.collective_stats``."""
-    return _plan_volume(_param_shapes(engine), engine, wire)
+    node — analytic accounting from the sparsity plan through the
+    engine's top-boundary :class:`repro.comm.WireCodec`.  ``wire=True``
+    counts the *effective* wire format (q8 ships 1-byte elements +
+    per-group scales, topk ships value+index entries); ``wire=False``
+    counts param-dtype (dense-codec) equivalents.  The measured
+    counterpart (actual XLA schedule) is ``engine.consensus_hlo`` +
+    ``dist.hlo.collective_stats``."""
+    codec = engine.spec.codecs[-1] if wire and not engine.spec.solo \
+        else "dense"
+    return _plan_volume(_param_shapes(engine), engine, codec)
 
 
 def round_comm_bytes(engine: Engine) -> tuple[int, int, int]:
@@ -137,27 +145,27 @@ def round_comm_bytes(engine: Engine) -> tuple[int, int, int]:
     the executables the loop actually runs — NOT a round-index heuristic:
 
       * the top-level (slow fabric) boundary ships the statically-compact
-        buffer iff ``compact_from_level`` covers it (it does not in the
-        flat PruneX(AR) ablation, whose payload is honestly dense);
-      * at the int8 wire dtype only when the executable actually
-        quantizes the top boundary (consensus routes through _wsum_q8 at
-        the K-th reduction for K > 1, or at level 1 when it is already
-        compact — the flat K=1, compact_from_level>=1 ablation never
-        quantizes);
+        buffer iff ``compact_from_level`` covers it or the codec spec
+        carries the ``compact`` marker (neither does in the flat
+        PruneX(AR) ablation, whose payload is honestly dense);
+      * bytes come from the top boundary's ``WireCodec.wire_bytes`` —
+        the same codec the consensus executable actually routes that
+        exchange through (``spec.codecs[-1]``; the flat K=1,
+        compact_from_level>=1 ablation resolves to the intra codec, so
+        legacy ``comm_quant``/``wire_inter`` never touch it);
       * dynamic rounds add the Phase-3 mask-agreement bytes; frozen
         rounds (§4.5) skip mask sync entirely;
       * solo engines have no consensus exchange at all.
     """
     shapes = _param_shapes(engine)
-    dense_eq, _ = _plan_volume(shapes, engine, wire=False)
+    dense_eq, _ = _plan_volume(shapes, engine, "dense")
     if engine.spec.solo:
         return dense_eq, 0, 0
-    levels = engine.consensus.levels
-    kc = engine.consensus.compact_from_level
-    quantizes = len(levels) > 1 or kc == 0
-    dense_w, compact_w = _plan_volume(shapes, engine, wire=quantizes)
-    top_compact = (len(levels) - 1) >= kc
-    base = compact_w if top_compact else dense_w
+    codecs = engine.spec.codecs
+    top = codecs[-1]
+    dense_w, compact_w = _plan_volume(shapes, engine, top)
+    base = compact_w if engine.spec.boundary_compact(len(codecs), codecs) \
+        else dense_w
     mask_b = mask_sync_bytes(shapes, engine.bundle.plan,
                              engine.cfg.hsadmm.mask_mode)
     return dense_eq, base + mask_b, base
@@ -202,6 +210,8 @@ def train(engine: Engine, run: Optional[RunConfig] = None, *,
 
 
 def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
+    if run.wire_intra or run.wire_inter:
+        engine = engine.with_wire(run.wire_intra, run.wire_inter)
     cfg = engine.cfg
     hp = cfg.hsadmm
     log = run.log

@@ -1,7 +1,13 @@
 """The fused round executable (paper §4.1.4): equivalence with the legacy
 per-step dispatch path across consensus granularities, the one-dispatch-
 per-round invariant (CI guard against per-step dispatch regressions),
-state donation, and the loop's executable-derived comm accounting."""
+state donation, and the loop's executable-derived comm accounting.
+
+The ``WIRE_CODEC`` env var (CI codec-matrix job) swaps the engines'
+top-boundary wire codec so every guard here also holds under ``q8``,
+``compact+q8``, ``topk:<rate>``, ... (tests with codec-specific byte
+expectations pin their codec explicitly)."""
+import os
 import warnings
 
 import jax
@@ -102,10 +108,11 @@ def test_round_step_matches_legacy(levels, kc, gran, frozen):
     close(m.s_dual, info["s_dual"])
 
 
-def _engine(t_freeze=3):
+def _engine(t_freeze=3, wire_inter=None):
+    wire = wire_inter or os.environ.get("WIRE_CODEC")
     cfg = get_config("tinyllama-1.1b", smoke=True).replace(
         hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=4,
-                            t_freeze=t_freeze))
+                            t_freeze=t_freeze, wire_inter=wire))
     bundle = build(cfg)
     return Engine(bundle, make_host_mesh(), SHAPE,
                   consensus=ConsensusSpec(levels=(2, 2),
@@ -206,13 +213,13 @@ def test_fused_and_legacy_loop_agree():
 
 
 def test_round_comm_bytes_derived_from_executable():
-    """Accounting follows (executable, compact_from_level, wire format),
+    """Accounting follows (executable, compact_from_level, wire codec),
     not a round heuristic: hierarchical rounds ship compact payloads
     (+ mask sync when dynamic); the flat AR ablation honestly ships
-    dense — and, since its executable never routes through _wsum_q8,
-    param-dtype bytes even under comm_quant=int8."""
+    dense — and, since its single boundary resolves to the intra codec,
+    param-dtype bytes even under the legacy comm_quant=int8 shim."""
     import dataclasses
-    eng = _engine()
+    eng = _engine(wire_inter="dense")   # byte expectations pin the codec
     dense_eq, dyn_b, frz_b = round_comm_bytes(eng)
     assert frz_b < dyn_b < dense_eq               # mask sync is small
     flat = Engine(eng.bundle, eng.mesh, SHAPE,
@@ -223,7 +230,7 @@ def test_round_comm_bytes_derived_from_executable():
     assert dyn_f > dense_eq
 
     cfg8 = eng.cfg.replace(hsadmm=dataclasses.replace(
-        eng.cfg.hsadmm, comm_quant="int8"))
+        eng.cfg.hsadmm, comm_quant="int8", wire_inter=None))
     bundle8 = build(cfg8)
     hier8 = Engine(bundle8, eng.mesh, SHAPE,
                    consensus=ConsensusSpec(levels=(2, 2),

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.comm import get_codec
 from repro.core.sparsity import (GroupRule, LeafAxis, SparsityPlan,
                                  topk_mask, project)
 from repro.core.shrinkage import compact_leaf, expand_leaf
@@ -72,6 +73,62 @@ def test_bitwise_or_union_superset(M, seed):
         _, li = topk_mask(scores[i], keep)
         union[np.asarray(li)] = 1
     assert np.all(np.asarray(mask) >= union)
+
+
+# ---------------------------------------------------------------------------
+# wire codecs (repro.comm)
+# ---------------------------------------------------------------------------
+
+
+@given(lead=st.sampled_from([2, 4]), n=st.integers(3, 40),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_dense_codec_group_reduce_exact(lead, n, seed):
+    """The dense codec is an exact weighted group-sum (bit-for-bit the
+    reference reduction)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (lead, n))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (lead,)) + 0.1
+    red, _ = get_codec("dense").group_reduce({"x": x}, lead, w)
+    ref = (x * w[:, None]).reshape(1, lead, n).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(red["x"]), np.asarray(ref))
+
+
+@given(lead=st.sampled_from([2, 4]), n=st.integers(3, 40),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_q8_codec_error_bounded_per_leaf(lead, n, scale, seed):
+    """q8 group-sum error <= sum over members of max|x_m|/127 per leaf
+    (per-member symmetric-quantization bound, any magnitude scale)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (lead, n)) * scale
+    w = jnp.ones((lead,))
+    dense, _ = get_codec("dense").group_reduce({"x": x}, lead, w)
+    q8, _ = get_codec("q8").group_reduce({"x": x}, lead, w)
+    bound = float(np.abs(np.asarray(x)).max(-1).sum()) / 127.0 + 1e-6
+    assert float(jnp.max(jnp.abs(q8["x"] - dense["x"]))) <= bound
+
+
+@given(rate=st.floats(0.05, 0.9), rounds=st.integers(2, 6),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_topk_codec_error_feedback_sums_to_dense(rate, rounds, seed):
+    """Over any number of rounds, accumulated top-k reductions + the
+    pending residual == the accumulated dense reduction (DGC error
+    feedback is lossless bookkeeping)."""
+    codec = get_codec(f"topk:{rate}")
+    lead = 4
+    key = jax.random.PRNGKey(seed)
+    st_ef, acc, dense_acc = None, 0.0, 0.0
+    w = jnp.ones((lead,))
+    for r in range(rounds):
+        x = jax.random.normal(jax.random.fold_in(key, r), (lead, 24))
+        red, st_ef = codec.group_reduce({"x": x}, lead, w, st_ef)
+        acc = acc + red["x"]
+        dense_acc = dense_acc + x.sum(0, keepdims=True)
+    total = acc + st_ef["x"].sum(0, keepdims=True)
+    np.testing.assert_allclose(np.asarray(total), np.asarray(dense_acc),
+                               rtol=1e-5, atol=1e-5)
 
 
 @given(seed=st.integers(0, 2**16))

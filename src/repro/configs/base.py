@@ -71,6 +71,10 @@ class HsadmmConfig:
     # boundary.  None = "dense" (the paper's param-dtype exchange).
     wire_intra: Optional[str] = None
     wire_inter: Optional[str] = None
+    # Physical reconfiguration (Engine.reconfigure / RunConfig.reconfig):
+    # consecutive frozen-mask rounds to wait before the one-time retrace
+    # of the round executable onto the budget-B architecture.
+    reconfig_patience: int = 2
     # DEPRECATED (one-release shim): legacy wire format of the top-level
     # exchange; "int8"/"q8" maps to wire_inter="q8".  Use wire_inter.
     comm_quant: Optional[str] = None

@@ -3,9 +3,11 @@ from .sparsity import (GroupRule, LeafAxis, SparsityPlan, group_scores,
                        topk_mask, project, keep_count, get_leaf, set_leaf)
 from .masks import MaskSyncConfig, sync_masks, budget
 from .shrinkage import (compact_leaf, expand_leaf, compact_params,
-                        expand_params, mask_sync_bytes, plan_bytes,
+                        expand_params, compact_state, expand_state,
+                        shrunk_plan, mask_sync_bytes, plan_bytes,
                         plan_payload_shapes)
-from .hsadmm import (EngineSpec, RoundMetrics, init_state, local_step,
+from .hsadmm import (EngineSpec, RoundMetrics, identity_mask_state,
+                     init_state, local_step,
                      round_step, flatten, unflatten, leaf_keys, group_sum,
                      ungroup)
 from .consensus import consensus_step
@@ -15,8 +17,9 @@ __all__ = [
     "GroupRule", "LeafAxis", "SparsityPlan", "group_scores", "topk_mask",
     "project", "keep_count", "get_leaf", "set_leaf", "MaskSyncConfig",
     "sync_masks", "budget", "compact_leaf", "expand_leaf", "compact_params",
-    "expand_params", "mask_sync_bytes", "plan_bytes", "plan_payload_shapes",
-    "EngineSpec",
+    "expand_params", "compact_state", "expand_state", "shrunk_plan",
+    "mask_sync_bytes", "plan_bytes", "plan_payload_shapes",
+    "EngineSpec", "identity_mask_state",
     "RoundMetrics", "init_state", "local_step", "round_step", "flatten",
     "unflatten", "leaf_keys", "group_sum", "ungroup", "consensus_step",
     "converged", "tree_norm",

@@ -229,26 +229,32 @@ def _init_wire_states(params0: Params, spec: EngineSpec, codecs: list
     return out
 
 
+def identity_mask_state(rule, stack_shape: tuple, B: int) -> dict:
+    """All-kept mask state for one rule: idx = arange(B) (block-local for
+    balanced rules), valid/mask all-ones, drift zero.  The init state of
+    every rule, and the migrated mask state of a reconfigured engine's
+    compactable rules (whose group axis IS the budget)."""
+    if rule.shards == 1:
+        idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32),
+                               stack_shape + (B,))
+    else:  # balanced rules use block-local indices
+        idx = jnp.broadcast_to(
+            jnp.arange(B // rule.shards, dtype=jnp.int32),
+            stack_shape + (rule.shards, B // rule.shards))
+    return {
+        "idx": idx,
+        "valid": jnp.ones(idx.shape, jnp.float32),
+        "mask": jnp.ones(stack_shape + (rule.groups,), jnp.float32),
+        "drift": jnp.zeros((), jnp.float32),
+    }
+
+
 def _init_masks(params0: Params, spec: EngineSpec) -> dict:
     # masks: all-ones init (paper line 1: m_global <- 1)
-    masks = {}
-    for rule in spec.plan.rules:
-        stack_shape = _rule_stack_shape(params0, rule)
-        B = spec.budgets[rule.name]
-        if rule.shards == 1:
-            idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32),
-                                   stack_shape + (B,))
-        else:  # balanced rules use block-local indices
-            idx = jnp.broadcast_to(
-                jnp.arange(B // rule.shards, dtype=jnp.int32),
-                stack_shape + (rule.shards, B // rule.shards))
-        masks[rule.name] = {
-            "idx": idx,
-            "valid": jnp.ones(idx.shape, jnp.float32),
-            "mask": jnp.ones(stack_shape + (rule.groups,), jnp.float32),
-            "drift": jnp.zeros((), jnp.float32),
-        }
-    return masks
+    return {rule.name: identity_mask_state(
+                rule, _rule_stack_shape(params0, rule),
+                spec.budgets[rule.name])
+            for rule in spec.plan.rules}
 
 
 def _rule_stack_shape(params0: Params, rule) -> tuple[int, ...]:

@@ -11,8 +11,17 @@ mask; only the tiny score/bit reduction precedes this).
 rules touching the same leaf on different axes compose (the paper's S_f ∩ S_c
 slicing, Fig. 4).  ``plan_bytes`` provides the exact byte accounting used by
 the volume benchmarks (Fig. 6) and the roofline collective term.
+
+``compact_state``/``expand_state`` lift the per-tree migration to the WHOLE
+H-SADMM state (theta/mom/u, every z/v level, wire error-feedback state) —
+the physical-reconfiguration path (PruneTrain-style): once masks freeze the
+training state itself moves onto budget-B shapes and the round executable
+is retraced over the smaller dense model.  ``shrunk_plan`` builds the
+matching all-kept sparsity plan for the reconfigured engine.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +135,92 @@ def expand_params(params: dict, plan: SparsityPlan, idxs: dict,
                             rule.stack_ndims, offset, rule.shards)
             params = set_leaf(params, la.key, x)
     return params
+
+
+# ---------------------------------------------------------------------------
+# whole-state migration (physical reconfiguration, PruneTrain-style)
+# ---------------------------------------------------------------------------
+
+
+_LEAD_GROUPS = ("theta", "mom", "u")   # (W, *param) per-worker trees
+
+
+def shrunk_plan(plan: SparsityPlan, budgets: dict) -> SparsityPlan:
+    """The reconfigured engine's plan: every compactable rule's group axis
+    IS its static budget B (all groups kept — projection degenerates to
+    identity, compaction to an identity gather, so the consensus program
+    keeps its structure and every wire-state shape is invariant across
+    the reconfiguration).  Projection-only (composite-axis) rules keep
+    their full group count; their cached masks ride along unchanged."""
+    rules = []
+    for r in plan.rules:
+        if r.compactable:
+            B = int(budgets[r.name])
+            rules.append(dataclasses.replace(r, groups=B, keep=B))
+        else:
+            rules.append(r)
+    return SparsityPlan(tuple(rules))
+
+
+def compact_state(state: dict, plan: SparsityPlan, idxs: dict,
+                  new_masks: dict, wire_compact: tuple = ()) -> dict:
+    """Migrate a frozen full-shape H-SADMM state onto budget-B shapes.
+
+    Every per-worker tree (theta/mom/u), every consensus level (z[k],
+    v[k]) and every *dense-boundary* wire error-feedback tree is sliced
+    through ``compact_params`` with the frozen kept-index set; wire
+    state of boundaries that already shipped the compact buffer
+    (``wire_compact[k]``) is payload-shaped at B and passes through
+    untouched.  rho (per-stack), weights and counters are shape-invariant.
+    Discarding the dropped coordinates IS the reconfiguration's
+    projection: ``expand_state(compact_state(s))`` equals ``s`` with the
+    dropped groups zeroed, which is the exact full-shape reference the
+    differential conformance suite trains against.
+    """
+    out = dict(state)
+    for g in _LEAD_GROUPS:
+        if g in state:
+            out[g] = compact_params(state[g], plan, idxs, offset=1)
+    if "z" in state:
+        out["z"] = [compact_params(z, plan, idxs, offset=1)
+                    for z in state["z"]]
+        out["v"] = [compact_params(v, plan, idxs, offset=1)
+                    for v in state["v"]]
+    if "wire" in state:
+        out["wire"] = [
+            w if (not w or (k < len(wire_compact) and wire_compact[k]))
+            else compact_params(w, plan, idxs, offset=1)
+            for k, w in enumerate(state["wire"])]
+    out["masks"] = new_masks
+    return out
+
+
+def expand_state(state: dict, plan: SparsityPlan, idxs: dict, fulls: dict,
+                 masks_full: dict, wire_compact: tuple = ()) -> dict:
+    """Inverse of :func:`compact_state`: zero-fill every migrated tree
+    back onto the full-architecture shapes (export / cross-shape
+    checkpoint restore).  ``masks_full`` is the frozen full-shape mask
+    state the reconfiguration was derived from; it is reinstated (drift
+    zeroed) so the expanded state is a valid frozen full-shape state."""
+    out = dict(state)
+
+    def exp(tree):
+        return expand_params(tree, plan, idxs, fulls, offset=1)
+
+    for g in _LEAD_GROUPS:
+        if g in state:
+            out[g] = exp(state[g])
+    if "z" in state:
+        out["z"] = [exp(z) for z in state["z"]]
+        out["v"] = [exp(v) for v in state["v"]]
+    if "wire" in state:
+        out["wire"] = [
+            w if (not w or (k < len(wire_compact) and wire_compact[k]))
+            else exp(w)
+            for k, w in enumerate(state["wire"])]
+    out["masks"] = {name: dict(m, drift=jnp.zeros((), jnp.float32))
+                    for name, m in masks_full.items()}
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,16 @@ the (host) arrays synchronously, then hands the disk work to a daemon
 writer thread so the training loop never blocks on I/O; :func:`flush`
 joins all pending writes.
 
+Cross-shape (reconfigured) checkpoints: a run that has physically
+reconfigured (``Engine.reconfigure``) saves its state at the shrunk
+budget-B shapes, with ``meta["reconfigured"] = True`` and the frozen
+full-shape mask state in the checkpoint's *aux* arrays (``save(...,
+aux=...)`` / :func:`load_aux`).  Restoring goes in either direction:
+into a reconfigured engine directly (template shapes match), or back to
+full shapes via ``Engine.expand_reconfigured`` after rebuilding the
+reconfigured engine from the aux masks (the training loop's resume path
+does exactly this; see ``train.loop``).
+
 Elastic restart (paper §4.6): :func:`restore_elastic` restores into a
 template whose worker count ``W`` differs from the saved one.  Surviving
 workers keep their per-worker state (``theta``/``mom``/``u`` rows); *new*
@@ -139,16 +149,24 @@ def flush() -> None:
 # ---------------------------------------------------------------------------
 
 
+_AUX = "aux/"
+
+
 def save(ckpt_dir: str, state: Any, meta: dict, *, keep: Optional[int] = None,
-         background: bool = False) -> Optional[str]:
+         background: bool = False, aux: Optional[dict] = None
+         ) -> Optional[str]:
     """Write one checkpoint of ``state`` (any pytree of arrays).
 
     ``meta`` must carry an integer ``"step"`` (names the directory; higher
     steps are newer).  ``keep=N`` prunes all but the N newest checkpoints
     after a successful publish.  ``background=True`` snapshots the arrays
     to host memory synchronously and returns immediately; the write runs
-    on the daemon writer thread (:func:`flush` to join).  Returns the
-    published directory, or None for background saves.
+    on the daemon writer thread (:func:`flush` to join).  ``aux`` is an
+    optional flat dict of side-channel arrays stored under a reserved
+    prefix — invisible to :func:`restore`/:func:`restore_elastic`
+    (which walk the template only), read back with :func:`load_aux`;
+    reconfigured runs keep their frozen full-shape masks here.  Returns
+    the published directory, or None for background saves.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
     meta = dict(meta)
@@ -158,10 +176,13 @@ def save(ckpt_dir: str, state: Any, meta: dict, *, keep: Optional[int] = None,
         # mutate/donate before the writer drains the queue
         arrays = {p: np.array(v, copy=True)
                   for p, v in _flatten(state).items()}
+        arrays.update({_AUX + k: np.array(v, copy=True)
+                       for k, v in (aux or {}).items()})
         _ensure_worker()
         _queue.put((ckpt_dir, arrays, meta, keep))
         return None
     arrays = {p: np.asarray(v) for p, v in _flatten(state).items()}
+    arrays.update({_AUX + k: np.asarray(v) for k, v in (aux or {}).items()})
     return _write(ckpt_dir, arrays, meta, keep)
 
 
@@ -186,6 +207,22 @@ def _load(path: str) -> tuple[dict[str, np.ndarray], dict]:
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     return arrays, meta
+
+
+def read_meta(path: str) -> dict:
+    """The checkpoint's meta dict alone (no array load) — lets a resuming
+    loop pick the right template shapes (full vs reconfigured) before
+    restoring."""
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)
+
+
+def load_aux(path: str) -> dict[str, np.ndarray]:
+    """Side-channel arrays stored via ``save(..., aux=...)``, with the
+    reserved prefix stripped (empty dict when the save carried none)."""
+    arrays, _ = _load(path)
+    return {k[len(_AUX):]: a for k, a in arrays.items()
+            if k.startswith(_AUX)}
 
 
 def restore(path: str, template: Any) -> tuple[Any, dict]:

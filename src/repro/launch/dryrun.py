@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# APPEND to any user-provided XLA_FLAGS rather than clobbering them (a
+# user's dump/profiling flags must survive the dry-run); ours comes last
+# so the forced device count wins if both set one.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512"
+                           ).strip()
 
 # --------------------------------------------------------------------------
 # Multi-pod dry-run: lower + compile every (architecture x input shape) on

@@ -35,21 +35,47 @@ def prune_params_compact(bundle, params):
 def pruned_serving_bundle(bundle, params):
     """The ``--pruned`` serving mode as a function: project + compact the
     params and rebuild the model at the reduced width so GEMMs run at the
-    compact size (paper Table 1, last column).  FFN-family rules shrink
-    the config's ``d_ff`` to the FIRST ``ffn*`` rule's keep budget (they
-    all share the hidden width).  Returns (pruned bundle, compact
-    params, masks)."""
+    compact size (paper Table 1, last column).  The width mapping is
+    ``models.shrink_config`` — every compactable rule's group dimension
+    becomes its keep budget (the FFN width-shrink branch shrinks the
+    shared ``d_ff``; GQA-group rules shrink ``n_kv_heads``/``n_heads``,
+    so the rebuilt model's shapes always match the compacted params).
+    Returns (pruned bundle, compact params, masks)."""
     import dataclasses
 
-    from ..models import build
+    from ..models import build, shrink_config
     compact, masks = prune_params_compact(bundle, params)
-    new_cfg = bundle.cfg
-    ffn = next((r for r in bundle.plan.rules if r.name.startswith("ffn")),
-               None)
-    if ffn is not None:
-        new_cfg = new_cfg.replace(d_ff=ffn.keep)   # width-shrink branch
+    budgets = {r.name: r.keep for r in bundle.plan.rules}
+    # strict=False: families without a full width mapping keep the
+    # legacy serve-time behaviour (first ffn* rule shrinks d_ff)
+    new_cfg = shrink_config(bundle.cfg, bundle.plan, budgets, strict=False)
     bundle2 = dataclasses.replace(build(new_cfg), cfg=new_cfg)
     return bundle2, compact, masks
+
+
+def serving_bundle_from_state(engine, state):
+    """Export a serving bundle straight from H-SADMM training state.
+
+    The exported params are the top-level consensus ``z`` (the one
+    vector every worker agrees on; ``theta`` in the solo degenerate
+    case).  On a RECONFIGURED engine (``Engine.reconfigure``) the state
+    is already at budget-B shapes and ``engine.bundle`` is already the
+    shrunk model, so the export is a lead-dim squeeze — no round-trip
+    expansion.  On a full-shape engine the frozen masks' kept-index set
+    slices the compact params directly (no re-projection — serving uses
+    exactly the mask the run converged to).  Returns (bundle, params)."""
+    spec = engine.spec
+    if spec.solo:
+        params = jax.tree.map(lambda x: x[0], state["theta"])
+    else:
+        params = jax.tree.map(lambda z: z[0], state["z"][-1])
+    if engine.reconfigured:
+        return engine.bundle, params
+    eng2, _ = engine.reconfigure(masks=state["masks"])
+    idxs = {r.name: state["masks"][r.name]["idx"]
+            for r in engine.bundle.plan.rules}
+    compact = compact_params(params, engine.bundle.plan, idxs)
+    return eng2.bundle, compact
 
 
 def main(argv=None):

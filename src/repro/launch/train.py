@@ -55,6 +55,14 @@ def main(argv=None):
                     help="j:k0:k1 — fail worker j during [k0,k1)")
     ap.add_argument("--straggler", default=None,
                     help="j:factor[:halflife] — down-weight worker j")
+    ap.add_argument("--reconfig", action="store_true",
+                    help="physically reconfigure once masks freeze: "
+                         "migrate the whole H-SADMM state onto budget-B "
+                         "shapes and retrace the frozen round executable "
+                         "over the smaller dense model")
+    ap.add_argument("--reconfig-patience", type=int, default=None,
+                    help="frozen rounds to wait before the retrace "
+                         "(default: HsadmmConfig.reconfig_patience)")
     ap.add_argument("--legacy-rounds", action="store_true",
                     help="per-step dispatch instead of the fused round "
                          "executable (equivalence / dispatch-overhead "
@@ -130,8 +138,15 @@ def main(argv=None):
                         ft_policy=ft.compose(*policies) if policies else None,
                         fused_rounds=not args.legacy_rounds,
                         metrics_every=args.metrics_every,
+                        reconfig=args.reconfig,
+                        reconfig_patience=args.reconfig_patience,
                         hlo_stats=args.hlo_stats)
         _, rep = train(eng, run)
+        if rep.reconfigured_at is not None and rep.comm_bytes_internode:
+            print(f"[train] physically reconfigured at outer iter "
+                  f"{rep.reconfigured_at}; frozen-round payload "
+                  f"{rep.comm_bytes_internode[-1]/1e6:.3f}MB vs dense "
+                  f"{rep.comm_bytes_dense_equiv[-1]/1e6:.3f}MB")
         if rep.hlo_comm:
             for name, h in rep.hlo_comm.items():
                 print(f"[hlo:{name}] collectives="
@@ -141,7 +156,8 @@ def main(argv=None):
                       f"by_fabric={h['axis_bytes']}")
     if args.report:
         with open(args.report, "w") as f:
-            json.dump({k: v for k, v in rep.__dict__.items()}, f, indent=1)
+            json.dump({k: v for k, v in rep.__dict__.items()
+                       if k != "final_engine"}, f, indent=1)
     if rep.losses:
         print("final loss:", rep.losses[-1])
     else:

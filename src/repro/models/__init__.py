@@ -5,9 +5,9 @@ from .api import ModelBundle, add_fsdp
 _FAMILY = {}
 
 
-def build(cfg: ArchConfig) -> ModelBundle:
-    """Dispatch on cfg.family; imports are lazy to keep startup light."""
-    fam = cfg.family
+def _family_module(fam: str):
+    """Lazy per-family module registry (imports kept off the startup
+    path) — the ONE dispatch both build() and shrink_config() use."""
     if fam not in _FAMILY:
         if fam in ("dense",):
             from . import transformer as m
@@ -26,7 +26,38 @@ def build(cfg: ArchConfig) -> ModelBundle:
         else:
             raise KeyError(f"unknown family {fam!r}")
         _FAMILY[fam] = m
-    return _FAMILY[fam].build(cfg)
+    return _FAMILY[fam]
 
 
-__all__ = ["build", "ModelBundle", "add_fsdp"]
+def build(cfg: ArchConfig) -> ModelBundle:
+    return _family_module(cfg.family).build(cfg)
+
+
+def shrink_config(cfg: ArchConfig, plan, budgets: dict,
+                  strict: bool = True) -> ArchConfig:
+    """ArchConfig of the physically-shrunk model (every compactable
+    rule's group dimension replaced by its static budget B) — the width
+    mapping behind ``Engine.reconfigure`` and pruned-dense serving.
+
+    Dispatches to the family module's ``shrink_config`` when it defines
+    one.  Families without one either refuse loudly (``strict=True``,
+    the reconfiguration path — a partial mapping would build a model
+    whose shapes disagree with the fully-compacted state; e.g. the CNN
+    family's independent per-layer S_f/S_c rules need cross-layer
+    channel alignment first) or fall back to the legacy serve-time
+    width shrink (``strict=False``): the first ``ffn*`` rule's budget
+    becomes the shared ``d_ff``, other dims untouched."""
+    m = _family_module(cfg.family)
+    if hasattr(m, "shrink_config"):
+        return m.shrink_config(cfg, plan, budgets)
+    if not strict:
+        ffn = next((r for r in plan.rules
+                    if r.compactable and r.name.startswith("ffn")), None)
+        return cfg.replace(d_ff=int(budgets[ffn.name])) \
+            if ffn is not None else cfg
+    raise NotImplementedError(
+        f"physical reconfiguration has no width mapping for model "
+        f"family {cfg.family!r} yet")
+
+
+__all__ = ["build", "ModelBundle", "add_fsdp", "shrink_config"]

@@ -184,6 +184,34 @@ def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
     return SparsityPlan(tuple(rules))
 
 
+def shrink_config(cfg: ArchConfig, plan: SparsityPlan,
+                  budgets: dict) -> ArchConfig:
+    """ArchConfig of the physically-shrunk architecture: each compactable
+    rule's group dimension becomes its static budget B.
+
+    ``ffn*`` rules shrink the shared FFN hidden width ``d_ff`` (the serve
+    launcher's width-shrink branch); ``heads`` shrinks whole GQA groups —
+    ``n_kv_heads`` to B with the query-per-kv ratio preserved.  A
+    compactable rule without a width mapping refuses loudly rather than
+    building a model whose shapes silently disagree with the compacted
+    state."""
+    new = cfg
+    for r in plan.rules:
+        if not r.compactable:
+            continue
+        B = int(budgets[r.name])
+        if r.name.startswith("ffn"):
+            new = new.replace(d_ff=B)
+        elif r.name == "heads":
+            g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+            new = new.replace(n_kv_heads=B, n_heads=B * g)
+        else:
+            raise NotImplementedError(
+                f"rule {r.name!r} has no width mapping for physical "
+                "reconfiguration of the dense-transformer family")
+    return new
+
+
 def cache_specs(cfg: ArchConfig, B: int, S: int, data_axes) -> dict:
     """KV-cache sharding: batch over the data axes when divisible, else the
     sequence dim; head_dim over `model`."""

@@ -103,6 +103,10 @@ class Engine:
         self.extra_fsdp = extra_fsdp
         self.param_specs_flat = _flat_specs(bundle.param_specs)
         self._shardings = None
+        # set by reconfigure(): the full-shape parent engine + the frozen
+        # full-shape mask state the shrunk shapes were derived from
+        self.parent: Optional["Engine"] = None
+        self.frozen_masks: Optional[dict] = None
 
     def with_wire(self, intra: Optional[str] = None,
                   inter: Optional[str] = None) -> "Engine":
@@ -118,6 +122,99 @@ class Engine:
                                      cfg=self.cfg.replace(hsadmm=hp))
         return Engine(bundle, self.mesh, self.shape,
                       consensus=self.consensus, extra_fsdp=self.extra_fsdp)
+
+    # ------------------------------------------------------------------ #
+    # physical reconfiguration (paper §4.4 applied to the WHOLE run)
+    # ------------------------------------------------------------------ #
+
+    @property
+    def reconfigured(self) -> bool:
+        return self.parent is not None
+
+    def _boundary_compact_flags(self) -> tuple:
+        if self.spec.solo:
+            return ()
+        return tuple(self.spec.boundary_compact(k)
+                     for k in range(1, self.spec.num_levels + 1))
+
+    def reconfigure(self, state: Optional[dict] = None,
+                    masks: Optional[dict] = None):
+        """Retrace onto the physically-shrunk architecture once masks are
+        frozen (PruneTrain-style reconfiguration).
+
+        Builds a new Engine over the budget-B model (``models.
+        shrink_config`` width mapping + the all-kept ``shrunk_plan``, same
+        mesh/hierarchy/codecs) and migrates the ENTIRE H-SADMM state —
+        theta/z/u, momenta, wire error-feedback, rho — through
+        ``compact_state`` with one jitted executable pinned to the new
+        engine's shardings.  Returns ``(new_engine, migrated_state)``;
+        ``migrated_state`` is None when only ``masks`` (a frozen
+        full-shape mask state, e.g. from a checkpoint's aux arrays) is
+        given — the resume path, which restores directly into the new
+        engine's shapes.
+        """
+        import dataclasses as _dc
+
+        from ..core.hsadmm import identity_mask_state
+        from ..core.shrinkage import compact_state, shrunk_plan
+        from ..models import build as _build, shrink_config
+        if self.reconfigured:
+            raise ValueError("engine is already reconfigured")
+        if masks is None:
+            if state is None:
+                raise ValueError("reconfigure() needs state= or masks=")
+            masks = state["masks"]
+        spec = self.spec
+        budgets = spec.budgets
+        new_cfg = shrink_config(self.cfg, spec.plan, budgets)
+        new_plan = shrunk_plan(spec.plan, budgets)
+        bundle2 = _dc.replace(_build(new_cfg), cfg=new_cfg, plan=new_plan)
+        eng2 = Engine(bundle2, self.mesh, self.shape,
+                      consensus=self.consensus, extra_fsdp=self.extra_fsdp)
+        eng2.parent = self
+        eng2.frozen_masks = jax.tree.map(jnp.asarray, masks)
+        if state is None:
+            return eng2, None
+
+        wire_compact = self._boundary_compact_flags()
+        plan = spec.plan
+
+        def migrate(st):
+            idxs = {r.name: st["masks"][r.name]["idx"] for r in plan.rules}
+            new_masks = {}
+            for r2 in new_plan.rules:
+                old = st["masks"][r2.name]
+                if plan.rule(r2.name).compactable:
+                    new_masks[r2.name] = identity_mask_state(
+                        r2, old["mask"].shape[:-1], budgets[r2.name])
+                else:
+                    new_masks[r2.name] = dict(
+                        old, drift=jnp.zeros((), jnp.float32))
+            return compact_state(st, plan, idxs, new_masks, wire_compact)
+
+        mig = jax.jit(migrate, out_shardings=eng2.state_shardings())
+        return eng2, mig(state)
+
+    def expand_reconfigured(self, state: dict) -> dict:
+        """Inverse migration (on a RECONFIGURED engine): zero-fill the
+        compact state back onto the parent's full-architecture shapes —
+        cross-shape checkpoint restore, and the full-shape reference
+        state of the differential conformance suite."""
+        from ..core.shrinkage import expand_state
+        if not self.reconfigured:
+            raise ValueError("expand_reconfigured() needs a reconfigured "
+                             "engine (see Engine.reconfigure)")
+        parent = self.parent
+        plan = parent.spec.plan
+        masks_full = self.frozen_masks
+        idxs = {r.name: masks_full[r.name]["idx"] for r in plan.rules}
+        fulls = {r.name: r.groups for r in plan.rules}
+        wire_compact = parent._boundary_compact_flags()
+        exp = jax.jit(
+            lambda st: expand_state(st, plan, idxs, fulls, masks_full,
+                                    wire_compact),
+            out_shardings=parent.state_shardings())
+        return exp(state)
 
     # ------------------------------------------------------------------ #
     # sharding construction

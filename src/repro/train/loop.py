@@ -21,6 +21,18 @@ Consequences of the async cadence (all bounded by ``metrics_every``):
 (E separate local-step jits + a consensus jit, synced every round) for
 equivalence testing and dispatch-overhead benchmarks.
 
+``RunConfig(reconfig=True)`` arms PHYSICAL RECONFIGURATION: once masks
+have been frozen for ``reconfig_patience`` rounds, the loop migrates the
+entire H-SADMM state onto the budget-B shapes (``Engine.reconfigure``)
+and retraces the frozen round executable ONCE over the physically
+smaller model — smaller per-step FLOPs and memory, compact payloads at
+every fabric level.  Exactly one extra compile happens at the
+reconfiguration point; the steady state stays one dispatch per round
+with zero recompiles.  Checkpoints after the retrace are saved at the
+shrunk shapes with ``meta["reconfigured"]`` and the frozen full-shape
+masks in the aux arrays, so resume restores straight into a reconfigured
+engine (and ``Engine.expand_reconfigured`` recovers full shapes).
+
 Communication accounting is derived from which executable actually ran
 each round: the per-level compaction boundary (``compact_from_level`` or
 the codec's ``compact`` marker), the top boundary's wire codec
@@ -94,6 +106,12 @@ class RunConfig:
     # this run (the loop rebuilds the engine spec around them).
     wire_intra: Optional[str] = None
     wire_inter: Optional[str] = None
+    # physical reconfiguration: once masks have been frozen for
+    # `reconfig_patience` rounds (None = HsadmmConfig.reconfig_patience),
+    # migrate the whole state onto budget-B shapes and retrace the frozen
+    # round executable once (fused_rounds only)
+    reconfig: bool = False
+    reconfig_patience: Optional[int] = None
     log: Optional[Callable] = print
 
 
@@ -107,13 +125,23 @@ class TrainReport:
     comm_bytes_dense_equiv: list = field(default_factory=list)
     wall_times: list = field(default_factory=list)
     evals: list = field(default_factory=list)
-    # which executable ran each round: "dynamic" | "frozen"
+    # which executable ran each round: "dynamic" | "frozen" |
+    # "reconfigured" (the retraced frozen round on shrunk shapes)
     executables: list = field(default_factory=list)
     frozen_at: Optional[int] = None
+    # first round dispatched on the reconfigured executable (None if the
+    # run never physically reconfigured)
+    reconfigured_at: Optional[int] = None
     outer_iters: int = 0
     # measured collective schedule per executable (dist.hlo), keyed
-    # "dynamic"/"frozen"; None unless RunConfig.hlo_stats
+    # "dynamic"/"frozen" (+"reconfigured" after a retrace); None unless
+    # RunConfig.hlo_stats
     hlo_comm: Optional[dict] = None
+    # the engine that dispatched the LAST round — the reconfigured engine
+    # after a retrace (its bundle is the shrunk model; feed it to
+    # launch.serve.serving_bundle_from_state / expand_reconfigured).
+    # Not JSON-serializable; launchers drop it from report dumps.
+    final_engine: Optional[object] = field(default=None, repr=False)
 
 
 def _param_shapes(engine: Engine) -> dict:
@@ -182,12 +210,29 @@ def _hlo_comm_report(engine: Engine, state, run: "RunConfig") -> dict:
             colls = engine.round_collectives(frozen=frozen, shape=run.shape)
         else:
             colls = engine.consensus_collectives(state, frozen=frozen)
-        out[name] = {
-            "summary": hlo.summarize(colls),
-            "axis_bytes": hlo.axis_bytes(colls),
-            "internode_bytes": hlo.internode_bytes(colls),
-        }
+        out[name] = _hlo_entry(colls)
     return out
+
+
+def _masks_aux(masks: dict, plan) -> dict:
+    """Frozen full-shape mask state as flat checkpoint aux arrays."""
+    flat = {}
+    for r in plan.rules:
+        for f, v in masks[r.name].items():
+            flat[f"masks/{r.name}/{f}"] = jax.device_get(v)
+    return flat
+
+
+def _masks_from_aux(aux: dict, plan) -> dict:
+    return {r.name: {f: jnp.asarray(aux[f"masks/{r.name}/{f}"])
+                     for f in ("idx", "valid", "mask", "drift")}
+            for r in plan.rules}
+
+
+def _hlo_entry(colls) -> dict:
+    return {"summary": hlo.summarize(colls),
+            "axis_bytes": hlo.axis_bytes(colls),
+            "internode_bytes": hlo.internode_bytes(colls)}
 
 
 def train(engine: Engine, run: Optional[RunConfig] = None, *,
@@ -228,27 +273,65 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
         cons_dyn = engine.consensus_step_fn(frozen=False)
         cons_frz = engine.consensus_step_fn(frozen=True)
 
+    if run.reconfig and not run.fused_rounds:
+        raise ValueError("RunConfig.reconfig requires fused_rounds=True "
+                         "(the retrace targets the fused round executable)")
+    patience = run.reconfig_patience if run.reconfig_patience is not None \
+        else hp.reconfig_patience
+    rc_engine = None   # the reconfigured engine once the retrace happened
+
     state = None
     start_k = 0
     if run.ckpt_dir and run.resume:
         last = ckpt.latest(run.ckpt_dir)
         if last is not None:
+            restore_eng = engine
+            if ckpt.read_meta(last).get("reconfigured"):
+                # the save is at shrunk shapes: rebuild the reconfigured
+                # engine from the aux masks and restore straight into it
+                masks_full = _masks_from_aux(ckpt.load_aux(last),
+                                             engine.bundle.plan)
+                rc_engine, _ = engine.reconfigure(masks=masks_full)
+                restore_eng = rc_engine
             tmpl = jax.eval_shape(
-                lambda: engine.init_state_fn()(jax.random.PRNGKey(run.seed)))
+                lambda: restore_eng.init_state_fn()(
+                    jax.random.PRNGKey(run.seed)))
             tmpl = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
             state, meta = ckpt.restore_elastic(last, tmpl, engine.workers)
+            # restored leaves are host arrays: lay them out on the
+            # engine's canonical shardings, or the donated round
+            # executable's input/output aliasing disagrees on >1 device
+            state = jax.device_put(state, restore_eng.state_shardings())
             start_k = int(meta["step"])
+            if rc_engine is not None:
+                if not run.fused_rounds:
+                    raise ValueError(
+                        f"checkpoint {last} was saved by a reconfigured "
+                        "run; resuming it needs fused_rounds=True")
+                round_frz = rc_engine.round_step_fn(frozen=True)
             if log:
-                log(f"[loop] resumed from {last} at outer iter {start_k}")
+                log(f"[loop] resumed from {last} at outer iter {start_k}"
+                    + (" (reconfigured)" if rc_engine is not None else ""))
     if state is None:
         state = engine.init_state_fn()(jax.random.PRNGKey(run.seed))
 
     dense_eq_b, dyn_b, frz_b = round_comm_bytes(engine)
+    if rc_engine is not None:
+        _, _, frz_b = round_comm_bytes(rc_engine)
     report = TrainReport()
     if run.hlo_stats:
-        report.hlo_comm = _hlo_comm_report(engine, state, run)
+        if rc_engine is not None:
+            # reconfigured resume: the full-shape executables never
+            # dispatch this session — don't pay their AOT compiles
+            report.hlo_comm = {"reconfigured": _hlo_entry(
+                rc_engine.round_collectives(frozen=True, shape=run.shape))}
+        else:
+            report.hlo_comm = _hlo_comm_report(engine, state, run)
 
-    frozen = False
+    frozen = rc_engine is not None   # a reconfigured resume is frozen
+    if frozen:
+        report.frozen_at = start_k
+        report.reconfigured_at = start_k
     stop = False
     eta = jnp.float32(run.eta)
     metrics_every = max(run.metrics_every, 1) if run.fused_rounds else 1
@@ -299,6 +382,28 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
         t_block = time.time()
 
     for k in range(start_k, run.outer_iters):
+        if run.reconfig and frozen and rc_engine is None \
+                and report.frozen_at is not None \
+                and k - report.frozen_at >= patience:
+            # masks stable for `patience` frozen rounds: migrate the whole
+            # state onto budget-B shapes and retrace the frozen round ONCE
+            drain()
+            if stop:
+                break   # converged in the drained block: skip the retrace
+            t_r = time.time()
+            rc_engine, state = engine.reconfigure(state)
+            round_frz = rc_engine.round_step_fn(frozen=True)
+            _, _, frz_b = round_comm_bytes(rc_engine)
+            report.reconfigured_at = k
+            if report.hlo_comm is not None:
+                report.hlo_comm["reconfigured"] = _hlo_entry(
+                    rc_engine.round_collectives(frozen=True,
+                                                shape=run.shape))
+            if log:
+                log(f"[loop] physically reconfigured at outer iter {k}: "
+                    f"frozen-round payload {frz_b/1e6:.2f}MB/round")
+            host_overhead += time.time() - t_r   # migration is host-timed;
+            # the one retrace compile lands in the next round's wall time
         if run.ft_policy is not None:
             w = run.ft_policy(k, engine.workers)
             state = dict(state, weights=jnp.asarray(w, jnp.float32))
@@ -313,7 +418,9 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
             state, info = (cons_frz if frozen else cons_dyn)(state)
             m = round_metrics(state, info, loss, engine.spec)
         pending.append((k, was_frozen, m))
-        report.executables.append("frozen" if was_frozen else "dynamic")
+        report.executables.append(
+            "reconfigured" if (was_frozen and rc_engine is not None)
+            else ("frozen" if was_frozen else "dynamic"))
         report.comm_bytes_internode.append(frz_b if was_frozen else dyn_b)
         report.comm_bytes_dense_equiv.append(dense_eq_b)
         report.outer_iters = k + 1
@@ -337,12 +444,17 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
             ckpt.save(run.ckpt_dir, jax.device_get(state),
                       {"step": k + 1, "arch": cfg.name,
                        "workers": engine.workers,
-                       "levels": list(engine.consensus.levels)},
-                      keep=run.ckpt_keep, background=True)
+                       "levels": list(engine.consensus.levels),
+                       "reconfigured": rc_engine is not None},
+                      keep=run.ckpt_keep, background=True,
+                      aux=_masks_aux(rc_engine.frozen_masks,
+                                     engine.bundle.plan)
+                      if rc_engine is not None else None)
             host_overhead += time.time() - t_c
         if stop:
             break
     drain()
+    report.final_engine = rc_engine if rc_engine is not None else engine
     if run.ckpt_dir:
         ckpt.flush()   # background saves are durable once train() returns
     return state, report

@@ -1,0 +1,66 @@
+"""Golden seed-determinism regression: the quickstart-config trajectory.
+
+Two guards around the round executable's numerics:
+
+  * bit-stable replay — two runs in the same process, same seed, must
+    produce IDENTICAL per-round losses/residuals (any nondeterminism in
+    the fused round, the data pipeline, or the drain cadence fails here);
+  * golden fixture — the per-round trajectory is committed to
+    ``tests/golden/quickstart_trajectory.json``; a refactor of the round
+    executable that silently changes numerics (re-associated reductions,
+    dtype drift, reordered consensus phases) fails the comparison.
+
+Regenerate the fixture after an INTENTIONAL numerics change with
+
+    GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.train.engine import Engine
+from repro.train.loop import RunConfig, train
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "quickstart_trajectory.json")
+SHAPE = ShapeConfig("golden", "train", 32, 8)
+
+
+def _run():
+    cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+        hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=2,
+                            t_freeze=3))
+    eng = Engine(build(cfg), make_host_mesh(), SHAPE,
+                 consensus=ConsensusSpec(levels=(2, 2),
+                                         compact_from_level=1,
+                                         granularity="chip"))
+    _, rep = train(eng, RunConfig(outer_iters=6, shape=SHAPE, eta=3e-3,
+                                  seed=0, metrics_every=2, log=None))
+    return {"losses": rep.losses, "r_primal": rep.r_primal,
+            "s_dual": rep.s_dual, "drifts": rep.drifts,
+            "frozen_at": rep.frozen_at}
+
+
+def test_trajectory_is_bit_stable_and_matches_golden():
+    a = _run()
+    b = _run()
+    # replay determinism: exact, not approximate
+    assert a == b
+    if os.environ.get("GOLDEN_REGEN"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(a, f, indent=1)
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert a["frozen_at"] == want["frozen_at"]
+    for key in ("losses", "r_primal", "s_dual", "drifts"):
+        np.testing.assert_allclose(
+            a[key], want[key], rtol=1e-5, atol=1e-7,
+            err_msg=f"{key} drifted from the committed golden trajectory "
+                    "— if the numerics change is intentional, regenerate "
+                    "with GOLDEN_REGEN=1")

@@ -114,21 +114,25 @@ def fused_round_rows(quick=False, reps=8):
              f"{E}+1 dispatches/round; fused_speedup={us_l/us_f:.2f}x")]
 
 
-def _reconfig_bench_engine(E=4):
+def _reconfig_bench_engine(E=4, arch="tinyllama-1.1b"):
     from repro.configs import get_config
     from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
     from repro.launch.mesh import make_host_mesh
     from repro.models import build
     from repro.train.engine import Engine
 
-    cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+    cfg = get_config(arch, smoke=True).replace(
         hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=E,
                             t_freeze=10_000))
     shape = ShapeConfig("bench", "train", 32, 8)
     node = 2
-    eng = Engine(build(cfg), make_host_mesh(
-                     model=2 if jax.device_count() >= 8 else 1),
-                 shape,
+    if cfg.family == "cnn":
+        # replicated-weight DP family: shard the 4 ADMM workers over a
+        # 4-wide data axis when devices allow (matches tests/test_reconfig)
+        mesh = make_host_mesh(data=4 if jax.device_count() >= 4 else None)
+    else:
+        mesh = make_host_mesh(model=2 if jax.device_count() >= 8 else 1)
+    eng = Engine(build(cfg), mesh, shape,
                  consensus=ConsensusSpec(levels=(2, 2),
                                          compact_from_level=1,
                                          granularity="chip",
@@ -136,16 +140,17 @@ def _reconfig_bench_engine(E=4):
     return eng, shape
 
 
-def reconfig_rows(quick=False, reps=8):
+def reconfig_rows(quick=False, reps=8, arch="tinyllama-1.1b", tag=""):
     """Physical reconfiguration (Engine.reconfigure / §4.4 applied to the
     whole run): wall time of one frozen round on the full-shape masked
     model vs the retraced budget-B model — the paper's compact model run
-    end-to-end, not just on the wire."""
+    end-to-end, not just on the wire.  ``arch="resnet18"`` benchmarks the
+    paper's own model class through the coupling-graph reconfiguration."""
     from repro.data.pipeline import batches, superbatches
     from repro.data.synthetic import make_stream
 
     E = 4
-    eng, shape = _reconfig_bench_engine(E)
+    eng, shape = _reconfig_bench_engine(E, arch)
     stream = make_stream(eng.cfg, shape, eng.workers)
     sb = next(superbatches(
         batches(stream, eng.bundle.extra_inputs, shape), E))
@@ -170,45 +175,56 @@ def reconfig_rows(quick=False, reps=8):
     eng2, st2 = eng.reconfigure(state)   # migrate BEFORE the timed loop
     us_full = time_rounds(eng.round_step_fn(frozen=True), state)
     us_rec = time_rounds(eng2.round_step_fn(frozen=True), st2)
-    return [("round.frozen_full_us", us_full,
-             f"full-shape masked round (d_ff={eng.cfg.d_ff})"),
-            ("round.frozen_reconfig_us", us_rec,
-             f"retraced budget-B round (d_ff={eng2.cfg.d_ff}); "
+    if eng.cfg.family == "cnn":
+        w_full = f"outs={_cnn_outs(eng.cfg)}"
+        w_rec = f"outs={eng2.cfg.cnn_outs}"
+    else:
+        w_full, w_rec = f"d_ff={eng.cfg.d_ff}", f"d_ff={eng2.cfg.d_ff}"
+    return [(f"round.{tag}frozen_full_us", us_full,
+             f"full-shape masked round ({w_full})"),
+            (f"round.{tag}frozen_reconfig_us", us_rec,
+             f"retraced budget-B round ({w_rec}); "
              f"reconfig_speedup={us_full/us_rec:.2f}x")]
 
 
-def reconfig_hlo_rows(quick=False):
+def _cnn_outs(cfg):
+    from repro.models.cnn import _widths
+    return _widths(cfg)[1]
+
+
+def reconfig_hlo_rows(quick=False, arch="tinyllama-1.1b", tag=""):
     """Measured-HLO collective bytes per fabric tier, full-shape frozen
     round vs reconfigured: AOT-compiled in a subprocess on an 8-device
     forced-host mesh (the in-process single-device mesh schedules no
-    collectives)."""
+    collectives).  ``arch="resnet18"`` measures the paper's own model
+    class — the coupling-graph compaction on the wire."""
     import subprocess
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                JAX_PLATFORMS="cpu")
     env.setdefault("PYTHONPATH", "src")
     out = subprocess.run([sys.executable, "-m", "benchmarks.run",
-                          "--reconfig-hlo"],
+                          "--reconfig-hlo", f"--arch={arch}"],
                          capture_output=True, text=True, env=env)
     rows = []
     lines = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
     if out.returncode != 0 or not lines:
-        return [("comm.reconfig_hlo", 0.0,
+        return [(f"comm.{tag}reconfig_hlo", 0.0,
                  f"measurement subprocess failed: {out.stderr[-200:]!r}")]
     res = json.loads(lines[-1][len("RESULT "):])
     for fabric, full_b in sorted(res["full"].items()):
         rec_b = res["rec"].get(fabric, 0.0)
         saved = (1 - rec_b / full_b) * 100 if full_b else 0.0
-        rows.append((f"comm.reconfig_hlo_{fabric}_bytes", full_b,
+        rows.append((f"comm.{tag}reconfig_hlo_{fabric}_bytes", full_b,
                      f"reconfigured={rec_b:.0f}B ({saved:.0f}% saved)"))
     return rows
 
 
-def _reconfig_hlo_child():
+def _reconfig_hlo_child(arch="tinyllama-1.1b"):
     """--reconfig-hlo mode: runs under the 8-device env set by the parent
     and prints the per-fabric byte comparison as one RESULT line."""
     from repro.dist import hlo
-    eng, _ = _reconfig_bench_engine()
+    eng, _ = _reconfig_bench_engine(arch=arch)
     state = eng.init_state_fn()(jax.random.PRNGKey(0))
     eng2, _ = eng.reconfigure(state=state)
     print("RESULT " + json.dumps(
@@ -218,7 +234,9 @@ def _reconfig_hlo_child():
 
 def main():
     if "--reconfig-hlo" in sys.argv:
-        _reconfig_hlo_child()
+        arch = next((a.split("=", 1)[1] for a in sys.argv
+                     if a.startswith("--arch=")), "tinyllama-1.1b")
+        _reconfig_hlo_child(arch)
         return
     quick = "--quick" in sys.argv
     os.makedirs("experiments/bench", exist_ok=True)
@@ -264,8 +282,13 @@ def main():
                                  for k, v in o.items()))
     rows.extend(fused_round_rows(quick))
     rows.extend(reconfig_rows(quick))
+    # the paper's own model class: ResNet through the coupling-graph
+    # reconfiguration (frozen full-shape vs retraced shrunk round)
+    rows.extend(reconfig_rows(quick, arch="resnet18", tag="resnet_"))
     if not quick:
         rows.extend(reconfig_hlo_rows(quick))
+        rows.extend(reconfig_hlo_rows(quick, arch="resnet18",
+                                      tag="resnet_"))
     rows.extend(kernel_rows(quick))
 
     print("name,us_per_call,derived")

@@ -161,11 +161,27 @@ class ArchConfig:
     cross_period: int = 0
     img_tokens: int = 1601
 
-    # cnn (ResNet family)
+    # cnn (ResNet family).  cnn_widths is the per-stage BASE width; the
+    # derived per-stage widths can be overridden explicitly — the handles
+    # models.shrink_config uses for physical reconfiguration:
+    #   cnn_outs : residual-stream width per stage
+    #              (default: width*4 bottleneck, width basic)
+    #   cnn_cmid : block-internal conv width per stage
+    #              (default: width*cnn_width_mult bottleneck, width basic)
+    #   cnn_stem : stem conv output width (default: cnn_widths[0])
     cnn_blocks: tuple[int, ...] = ()
     cnn_widths: tuple[int, ...] = ()
     cnn_bottleneck: bool = False
     cnn_width_mult: int = 1
+    cnn_outs: tuple[int, ...] = ()
+    cnn_cmid: tuple[int, ...] = ()
+    cnn_stem: int = 0
+    # GroupNorm channels-per-group (group COUNT is derived as C // size, a
+    # deterministic function of the config — never a silent fallback).  It
+    # is also the pruning block size of every CNN coupling class, so the
+    # kept channel set is a union of whole normalization groups and
+    # reconfigured GN statistics match the full-shape masked model exactly.
+    cnn_gn_size: int = 8
     img_size: int = 32
     n_classes: int = 10
 

@@ -1,8 +1,12 @@
 """Paper's own evaluation models (Table 2): ResNet-18, ResNet-152,
 WideResNet-50-2 on CIFAR-10 [He+16; Zagoruyko&Komodakis 16].
 
-The paper's primary pruning config is channel keep-rate 0.5 on conv layers
-(§5.1.5); filter and shape rules are selectable via prune_targets.
+The paper's primary pruning config is channel keep-rate 0.5 (§5.1.5).
+``prune_targets``: "channel" and "filter" are aliases — both select the
+cross-layer COUPLED mask classes (models/cnn.py coupling graph: a pruned
+filter IS a pruned input channel of every consumer, so the two sets are
+one decision under physical reconfiguration); "shape" adds the
+projection-only S_s composite rules per conv.
 """
 from .base import ArchConfig, ConsensusSpec, register
 
@@ -47,6 +51,18 @@ def _smoke() -> ArchConfig:
     )
 
 
+def _smoke_bottleneck() -> ArchConfig:
+    # bottleneck smoke: exercises the separate-stem coupling class (stage 0
+    # opens with a projection shortcut) and the cmid != stream-width split
+    return ArchConfig(
+        name="resnet-smoke-bottleneck", family="cnn",
+        cnn_blocks=(1, 1), cnn_widths=(16, 16),
+        cnn_bottleneck=True, img_size=16, n_classes=10,
+        prune_targets=("channel", "filter"),
+        consensus=ConsensusSpec(granularity="chip"),
+    )
+
+
 register("resnet18", resnet18, _smoke)
-register("resnet152", resnet152, _smoke)
-register("wideresnet50-2", wideresnet50_2, _smoke)
+register("resnet152", resnet152, _smoke_bottleneck)
+register("wideresnet50-2", wideresnet50_2, _smoke_bottleneck)

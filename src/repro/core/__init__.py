@@ -1,11 +1,15 @@
-"""PruneX core: H-SADMM, structured sparsity, masks, shrinkage, consensus."""
+"""PruneX core: H-SADMM, structured sparsity, coupling, masks, shrinkage,
+consensus."""
 from .sparsity import (GroupRule, LeafAxis, SparsityPlan, group_scores,
-                       topk_mask, project, keep_count, get_leaf, set_leaf)
+                       topk_mask, project, keep_count, get_leaf, set_leaf,
+                       channel_idx, channel_mask)
+from .coupling import CouplingClass, CouplingGraph
 from .masks import MaskSyncConfig, sync_masks, budget
 from .shrinkage import (compact_leaf, expand_leaf, compact_params,
                         expand_params, compact_state, expand_state,
                         shrunk_plan, mask_sync_bytes, plan_bytes,
-                        plan_payload_shapes)
+                        plan_payload_shapes, compacting_rule,
+                        shrunk_projection_mask_state)
 from .hsadmm import (EngineSpec, RoundMetrics, identity_mask_state,
                      init_state, local_step,
                      round_step, flatten, unflatten, leaf_keys, group_sum,
@@ -15,10 +19,12 @@ from .residuals import converged, tree_norm
 
 __all__ = [
     "GroupRule", "LeafAxis", "SparsityPlan", "group_scores", "topk_mask",
-    "project", "keep_count", "get_leaf", "set_leaf", "MaskSyncConfig",
+    "project", "keep_count", "get_leaf", "set_leaf", "channel_idx",
+    "channel_mask", "CouplingClass", "CouplingGraph", "MaskSyncConfig",
     "sync_masks", "budget", "compact_leaf", "expand_leaf", "compact_params",
     "expand_params", "compact_state", "expand_state", "shrunk_plan",
     "mask_sync_bytes", "plan_bytes", "plan_payload_shapes",
+    "compacting_rule", "shrunk_projection_mask_state",
     "EngineSpec", "identity_mask_state",
     "RoundMetrics", "init_state", "local_step", "round_step", "flatten",
     "unflatten", "leaf_keys", "group_sum", "ungroup", "consensus_step",

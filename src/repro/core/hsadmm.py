@@ -233,7 +233,9 @@ def identity_mask_state(rule, stack_shape: tuple, B: int) -> dict:
     """All-kept mask state for one rule: idx = arange(B) (block-local for
     balanced rules), valid/mask all-ones, drift zero.  The init state of
     every rule, and the migrated mask state of a reconfigured engine's
-    compactable rules (whose group axis IS the budget)."""
+    compactable rules (whose group axis IS the budget).  All quantities
+    are in the rule's GROUP units (``rule.group_size`` channels per
+    group for the CNN family's GN-block-granular rules)."""
     if rule.shards == 1:
         idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32),
                                stack_shape + (B,))

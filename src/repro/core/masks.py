@@ -64,7 +64,13 @@ def sync_masks(node_scores: jnp.ndarray, rule: GroupRule,
         return idx, valid, mask
 
     if cfg.mode == "bitwise_or":
-        assert rule.shards == 1, "bitwise_or requires unsharded group axes"
+        if rule.shards != 1:
+            # a bare assert vanishes under `python -O` and the failure
+            # surfaces as shape soup deep in the consensus trace
+            raise ValueError(
+                f"mask mode 'bitwise_or' requires unsharded group axes, but "
+                f"rule {rule.name!r} is balanced over shards={rule.shards}; "
+                "use mask_mode='score_consensus' for balanced rules")
         B = budget(rule, cfg)
         local_mask, _ = topk_mask(node_scores, rule.keep)  # (M, *stack, C)
         union = jnp.max(local_mask, axis=0)                # OR  (tiny AllReduce)

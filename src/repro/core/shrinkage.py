@@ -26,7 +26,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .sparsity import GroupRule, SparsityPlan, get_leaf, set_leaf
+from .sparsity import (GroupRule, LeafAxis, SparsityPlan, channel_idx,
+                       get_leaf, set_leaf)
 
 
 def _bcast_idx(idx: jnp.ndarray, x_ndim: int, ax: int, stack_ndims: int,
@@ -109,12 +110,14 @@ def expand_leaf(c: jnp.ndarray, idx: jnp.ndarray, ax: int, full: int,
 
 def compact_params(params: dict, plan: SparsityPlan, idxs: dict,
                    offset: int = 0) -> dict:
-    """Slice every rule's kept groups out of every participating leaf."""
+    """Slice every rule's kept groups out of every participating leaf
+    (scored members AND followers; block-unit indices are expanded to
+    channel units)."""
     for rule in plan.rules:
         if not rule.compactable:
             continue  # projection-only rule (paper slices filter/channel only)
-        idx = idxs[rule.name]
-        for la in rule.leaves:
+        idx = channel_idx(rule, idxs[rule.name])
+        for la in rule.all_leaves:
             x = get_leaf(params, la.key)
             c = compact_leaf(x, idx, la.axes[0] + offset, rule.stack_ndims,
                              offset, rule.shards)
@@ -124,14 +127,16 @@ def compact_params(params: dict, plan: SparsityPlan, idxs: dict,
 
 def expand_params(params: dict, plan: SparsityPlan, idxs: dict,
                   fulls: dict, offset: int = 0) -> dict:
-    """Inverse of :func:`compact_params` (rules applied in reverse order)."""
+    """Inverse of :func:`compact_params` (rules applied in reverse order).
+    ``fulls`` is in the rule's group (block) units, like the budgets."""
     for rule in reversed(plan.rules):
         if not rule.compactable:
             continue
-        idx = idxs[rule.name]
-        for la in reversed(rule.leaves):
+        idx = channel_idx(rule, idxs[rule.name])
+        full = fulls[rule.name] * rule.group_size
+        for la in reversed(rule.all_leaves):
             c = get_leaf(params, la.key)
-            x = expand_leaf(c, idx, la.axes[0] + offset, fulls[rule.name],
+            x = expand_leaf(c, idx, la.axes[0] + offset, full,
                             rule.stack_ndims, offset, rule.shards)
             params = set_leaf(params, la.key, x)
     return params
@@ -145,21 +150,96 @@ def expand_params(params: dict, plan: SparsityPlan, idxs: dict,
 _LEAD_GROUPS = ("theta", "mom", "u")   # (W, *param) per-worker trees
 
 
-def shrunk_plan(plan: SparsityPlan, budgets: dict) -> SparsityPlan:
+def compacting_rule(plan: SparsityPlan, key: str, axis: int):
+    """The compactable rule (if any) that slices ``axis`` of leaf ``key``."""
+    for r in plan.rules:
+        if not r.compactable:
+            continue
+        for la in r.all_leaves:
+            if la.key == key and la.axes[0] == axis:
+                return r
+    return None
+
+
+def _composite_dims(rule: GroupRule, param_shapes) -> tuple[int, ...]:
+    """Per-axis dims of a (single-leaf) composite rule's group axes."""
+    if len(rule.leaves) != 1 or rule.followers:
+        raise NotImplementedError(
+            f"projection-only rule {rule.name!r} spans several leaves; "
+            "physical reconfiguration handles single-leaf composite rules")
+    la = rule.leaves[0]
+    return tuple(param_shapes[la.key][a] for a in la.axes)
+
+
+def shrunk_plan(plan: SparsityPlan, budgets: dict,
+                param_shapes: "dict | None" = None) -> SparsityPlan:
     """The reconfigured engine's plan: every compactable rule's group axis
     IS its static budget B (all groups kept — projection degenerates to
     identity, compaction to an identity gather, so the consensus program
     keeps its structure and every wire-state shape is invariant across
     the reconfiguration).  Projection-only (composite-axis) rules keep
-    their full group count; their cached masks ride along unchanged."""
+    their masks but must follow the coupled slicing: when one of their
+    group axes is compacted by another rule on the same leaf (the CNN
+    S_s ∩ S_c case), the composite group count shrinks by the same
+    factor — ``param_shapes`` (full leaf shapes, channel units) is
+    required to resolve the per-axis dims then."""
     rules = []
     for r in plan.rules:
         if r.compactable:
             B = int(budgets[r.name])
             rules.append(dataclasses.replace(r, groups=B, keep=B))
-        else:
+            continue
+        overlap = [(la.key, a) for la in r.all_leaves for a in la.axes
+                   if compacting_rule(plan, la.key, a) is not None]
+        if not overlap:
             rules.append(r)
+            continue
+        if param_shapes is None:
+            raise ValueError(
+                f"projection-only rule {r.name!r} shares compacted axes "
+                f"{overlap}; shrunk_plan needs param_shapes to resolve "
+                "the composite group dims")
+        dims = _composite_dims(r, param_shapes)
+        la = r.leaves[0]
+        new_groups = 1
+        for a, d in zip(la.axes, dims):
+            cr = compacting_rule(plan, la.key, a)
+            new_groups *= d if cr is None \
+                else int(budgets[cr.name]) * cr.group_size
+        rules.append(dataclasses.replace(
+            r, groups=new_groups, keep=min(r.keep, new_groups)))
     return SparsityPlan(tuple(rules))
+
+
+def shrunk_projection_mask_state(rule: GroupRule, new_rule: GroupRule,
+                                 mstate: dict, plan: SparsityPlan,
+                                 idxs: dict, param_shapes: dict) -> dict:
+    """Migrate a projection-only composite rule's frozen mask state onto
+    the reconfigured shapes: gather the mask along every group axis that
+    another rule compacts (the surviving S_s positions of the kept
+    channels), and rebuild idx/valid at the shrunk keep budget (kept
+    groups first; ``jax.lax.top_k`` tie-breaks by index, so the order is
+    deterministic).  Only stack-free composite rules occur today (the
+    CNN S_s rules); stacked ones raise."""
+    if rule.stack_ndims != 0:
+        raise NotImplementedError(
+            f"composite-rule mask migration with stack_ndims="
+            f"{rule.stack_ndims} ({rule.name!r})")
+    la = rule.leaves[0]
+    dims = _composite_dims(rule, param_shapes)
+    m = mstate["mask"].reshape(dims)
+    for i, a in enumerate(la.axes):
+        cr = compacting_rule(plan, la.key, a)
+        if cr is None:
+            continue
+        cidx = channel_idx(cr, idxs[cr.name])
+        m = jnp.take(m, cidx, axis=i)
+    m = m.reshape(-1)
+    _, idx = jax.lax.top_k(m, new_rule.keep)
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    valid = jnp.take(m, idx)
+    return {"idx": idx, "valid": valid, "mask": m,
+            "drift": jnp.zeros((), jnp.float32)}
 
 
 def compact_state(state: dict, plan: SparsityPlan, idxs: dict,
@@ -236,13 +316,14 @@ def leaf_bytes(shape: tuple[int, ...], dtype) -> int:
 def plan_payload_shapes(param_shapes: dict[str, tuple[int, ...]],
                         plan: SparsityPlan,
                         budgets: dict[str, int]) -> dict[str, tuple[int, ...]]:
-    """Shapes of the compacted inter-node payload for every pruned leaf."""
+    """Shapes of the compacted inter-node payload for every pruned leaf
+    (followers shrink with their mask class; budgets are group units)."""
     shapes = dict(param_shapes)
     for rule in plan.rules:
         if not rule.compactable:
             continue
-        B = budgets[rule.name]
-        for la in rule.leaves:
+        B = budgets[rule.name] * rule.group_size
+        for la in rule.all_leaves:
             s = list(shapes[la.key])
             s[la.axes[0]] = B
             shapes[la.key] = tuple(s)

@@ -51,12 +51,27 @@ class GroupRule:
     ``stack_ndims`` leading axes (shared by every leaf in the rule, e.g. the
     scan-over-layers axis L) index *independent* instances of the constraint:
     scores/masks have shape ``(*stack, groups)`` and top-k runs per instance.
+
+    ``followers`` are coupled leaves that share the rule's mask class but do
+    NOT contribute to group scores — PruneTrain-style mask propagation: a
+    pruned conv filter removes the matching GroupNorm scale/bias entry even
+    though the norm parameters never vote on which filter survives.
+    Followers are masked by ``apply_mask_rule`` and sliced by
+    ``compact_params`` exactly like ``leaves``.
+
+    ``group_size > 1`` makes the pruning unit a contiguous *block* of
+    ``group_size`` channels instead of a single channel: ``groups`` counts
+    blocks, scores pool over each block, and masks/keep budgets are in block
+    units.  The CNN family sets it to the GroupNorm group size so the kept
+    channel set is always a union of whole normalization groups — the
+    condition under which full-shape-masked and physically-reconfigured
+    GroupNorm compute identical statistics.
     """
 
     name: str
     leaves: tuple[LeafAxis, ...]
-    groups: int          # C, number of structured groups
-    keep: int            # alpha, static keep budget
+    groups: int          # C, number of structured groups (block units)
+    keep: int            # alpha, static keep budget (block units)
     stack_ndims: int = 1
     # ``shards > 1`` = *balanced* structured pruning (TPU adaptation,
     # DESIGN.md §2): the group axis is TP-sharded over `shards` devices, and
@@ -66,21 +81,38 @@ class GroupRule:
     # the compact buffer remains evenly TP-sharded.  S_balanced ⊂ S, so the
     # projection is still a valid (tighter) structured-sparsity projection.
     shards: int = 1
+    followers: tuple[LeafAxis, ...] = ()
+    group_size: int = 1
 
     def __post_init__(self):
         assert 0 < self.keep <= self.groups, (self.name, self.keep, self.groups)
         assert self.groups % self.shards == 0 and self.keep % self.shards == 0, \
             (self.name, self.groups, self.keep, self.shards)
-        for la in self.leaves:
+        for la in self.leaves + self.followers:
             assert min(la.axes) >= self.stack_ndims, (self.name, la)
         if self.shards > 1:
             assert self.compactable, "balanced rules must be single-axis"
+            assert self.group_size == 1, \
+                "balanced (sharded) rules use unit group_size"
+        if self.group_size > 1:
+            assert self.compactable, \
+                "block-granular (group_size>1) rules must be single-axis"
 
     @property
     def compactable(self) -> bool:
         """Shrinkable rules slice one axis per leaf into contiguous dense
         blocks (Eq. 15); composite-axis rules only mask."""
-        return all(len(la.axes) == 1 for la in self.leaves)
+        return all(len(la.axes) == 1 for la in self.leaves + self.followers)
+
+    @property
+    def width(self) -> int:
+        """Channel-unit extent of the group axis (= groups * group_size)."""
+        return self.groups * self.group_size
+
+    @property
+    def all_leaves(self) -> tuple[LeafAxis, ...]:
+        """Scored members first, then followers — the masking/slicing set."""
+        return self.leaves + self.followers
 
 
 @dataclass(frozen=True)
@@ -142,6 +174,9 @@ def group_scores(params: Mapping, rule: GroupRule, offset: int = 0) -> jnp.ndarr
     ``offset`` is the number of leading consensus dims (worker/node) present on
     every leaf; those are preserved in the output so scores stay per-worker.
     Returns *squared* norms (monotone in the norm, cheaper; top-k invariant).
+    Only the rule's scored ``leaves`` vote; ``followers`` ride the mask
+    without contributing.  ``group_size > 1`` pools each contiguous
+    channel block into one score.
     """
     total = None
     dst = offset + rule.stack_ndims
@@ -153,8 +188,29 @@ def group_scores(params: Mapping, rule: GroupRule, offset: int = 0) -> jnp.ndarr
         reduce_axes = tuple(range(dst + len(axes), x.ndim))
         s = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=reduce_axes)
         s = s.reshape(s.shape[:dst] + (-1,))    # (*lead, *stack, C)
+        if rule.group_size > 1:                 # pool channel blocks
+            s = s.reshape(s.shape[:-1] + (rule.groups, rule.group_size))
+            s = jnp.sum(s, axis=-1)
         total = s if total is None else total + s
     return total
+
+
+def channel_mask(rule: GroupRule, mask: jnp.ndarray) -> jnp.ndarray:
+    """Expand a block-unit mask (*batch, groups) to channel units
+    (*batch, groups*group_size); identity for unit group size."""
+    if rule.group_size == 1:
+        return mask
+    return jnp.repeat(mask, rule.group_size, axis=-1)
+
+
+def channel_idx(rule: GroupRule, idx: jnp.ndarray) -> jnp.ndarray:
+    """Expand block-unit kept indices (*batch, B) to the channel-unit kept
+    indices (*batch, B*group_size); identity for unit group size."""
+    if rule.group_size == 1:
+        return idx
+    s = rule.group_size
+    ch = idx[..., :, None] * s + jnp.arange(s, dtype=idx.dtype)
+    return ch.reshape(idx.shape[:-1] + (idx.shape[-1] * s,))
 
 
 def topk_mask(scores: jnp.ndarray, keep: int, shards: int = 1
@@ -186,10 +242,12 @@ def apply_mask_rule(params: dict, rule: GroupRule, mask: jnp.ndarray,
                     offset: int = 0) -> dict:
     """Zero out non-kept groups of every leaf in the rule (projection step).
 
-    ``mask`` has shape (*stack, C) or (*lead, *stack, C); it is broadcast over
-    the leaf's remaining axes.
+    ``mask`` has shape (*stack, C) or (*lead, *stack, C) in the rule's group
+    units; it is expanded to channel units and broadcast over the leaf's
+    remaining axes.  Followers are masked alongside the scored leaves.
     """
-    for la in rule.leaves:
+    mask = channel_mask(rule, mask)
+    for la in rule.all_leaves:
         x = _leaf(params, la.key)
         axes = tuple(a + offset for a in la.axes)
         # Reshape mask for broadcast: last mask axis (size C = prod of the

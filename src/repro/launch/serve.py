@@ -95,7 +95,11 @@ def main(argv=None):
     params = bundle.init(key)
     if args.pruned:
         bundle, params, _ = pruned_serving_bundle(bundle, params)
-        print(f"[serve] pruned model: d_ff -> {bundle.cfg.d_ff}")
+        if cfg.family == "cnn":
+            print(f"[serve] pruned model: widths -> stem {bundle.cfg.cnn_stem}"
+                  f", streams {bundle.cfg.cnn_outs}, mid {bundle.cfg.cnn_cmid}")
+        else:
+            print(f"[serve] pruned model: d_ff -> {bundle.cfg.d_ff}")
 
     B, P, G = args.batch, args.prompt_len, args.gen
     S = P + G

@@ -40,13 +40,15 @@ def shrink_config(cfg: ArchConfig, plan, budgets: dict,
     mapping behind ``Engine.reconfigure`` and pruned-dense serving.
 
     Dispatches to the family module's ``shrink_config`` when it defines
-    one.  Families without one either refuse loudly (``strict=True``,
-    the reconfiguration path — a partial mapping would build a model
-    whose shapes disagree with the fully-compacted state; e.g. the CNN
-    family's independent per-layer S_f/S_c rules need cross-layer
-    channel alignment first) or fall back to the legacy serve-time
-    width shrink (``strict=False``): the first ``ffn*`` rule's budget
-    becomes the shared ``d_ff``, other dims untouched."""
+    one (dense transformers map ``ffn*``/``heads`` rules onto
+    ``d_ff``/GQA groups; the CNN family reads its per-stage stream /
+    internal / stem widths off the coupling-graph classes, so
+    ``family="cnn"`` reconfigures end-to-end).  Families without one
+    either refuse loudly (``strict=True``, the reconfiguration path — a
+    partial mapping would build a model whose shapes disagree with the
+    fully-compacted state) or fall back to the legacy serve-time width
+    shrink (``strict=False``): the first ``ffn*`` rule's budget becomes
+    the shared ``d_ff``, other dims untouched."""
     m = _family_module(cfg.family)
     if hasattr(m, "shrink_config"):
         return m.shrink_config(cfg, plan, budgets)

@@ -3,12 +3,22 @@ CIFAR-style inputs — the PruneX paper's own evaluation models.
 
 GroupNorm replaces BatchNorm so the model stays purely functional (no
 running-stat buffers outside the consensus state; BN statistics are not
-synchronized model parameters in the paper either — recorded in DESIGN.md).
+synchronized model parameters in the paper either — DESIGN.md records the
+decision).  The group COUNT is derived deterministically from the config
+(``C // cnn_gn_size``) — never a silent fallback — so normalization
+semantics are invariant under physical reconfiguration.
 
-Structured sparsity is the paper's: per-conv-layer *filter* (S_f, C_out),
-*channel* (S_c, C_in) and optional *shape* (S_s, composite (KH,KW,Cin) —
-projection-only) rules, one rule per conv leaf, with layer-wise adaptive
-penalties falling out of the per-leaf rho arrays.
+Structured sparsity is derived from the :class:`core.coupling.CouplingGraph`
+(PruneTrain-style mask propagation): one mask class per block-internal
+width and one per residual stream, where a pruned filter removes the
+producing conv's C_out slice, every consumer's C_in slice (next conv,
+downsample branch, the fc rows behind global pooling) and the coupled
+GroupNorm scale/bias entries; identity skips union the whole stream into
+one shared class so skip additions stay shape-consistent.  The pruning
+unit is one GroupNorm group (``group_size=cnn_gn_size``), which makes the
+physically-reconfigured model's GN statistics EXACTLY equal to the
+full-shape masked model's.  The optional shape rules (S_s, composite
+(KH,KW,Cin) groups) stay per-conv and projection-only, as in the paper.
 """
 from __future__ import annotations
 
@@ -19,6 +29,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..core.coupling import CouplingGraph
+from ..core.shrinkage import compacting_rule
 from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
 from .api import ModelBundle
 from . import layers as L
@@ -26,6 +38,18 @@ from . import layers as L
 
 def _dt(cfg):
     return jnp.dtype(cfg.param_dtype)
+
+
+def _widths(cfg: ArchConfig) -> tuple[int, tuple[int, ...], tuple[int, ...]]:
+    """(stem, per-stage stream widths, per-stage internal widths) — the
+    explicit overrides when set (the reconfigured model), the classic
+    base-width derivation otherwise."""
+    bb = cfg.cnn_bottleneck
+    outs = cfg.cnn_outs or tuple((w * 4 if bb else w) for w in cfg.cnn_widths)
+    cmids = cfg.cnn_cmid or tuple(
+        (w * cfg.cnn_width_mult if bb else w) for w in cfg.cnn_widths)
+    stem = cfg.cnn_stem or cfg.cnn_widths[0]
+    return stem, outs, cmids
 
 
 def conv_init(key, kh, kw, cin, cout, dtype):
@@ -38,12 +62,23 @@ def conv(x, w, stride=1):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
-def group_norm(x, scale, bias, groups=8, eps=1e-5):
+def group_norm(x, scale, bias, group_size, eps=1e-5):
+    """GroupNorm with a FIXED channels-per-group size.
+
+    The group count is ``C // group_size`` — a deterministic function of
+    the (config-supplied) group size, where the old ``while C % g: g -= 1``
+    fallback silently changed the partition when channel widths shrank at
+    reconfigure time.  With channel pruning in whole-group units, every
+    surviving group normalizes over exactly the same channel set before
+    and after physical reconfiguration.
+    """
     B, H, W, C = x.shape
-    g = min(groups, C)
-    while C % g:
-        g -= 1
-    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    if C % group_size:
+        raise ValueError(
+            f"GroupNorm: {C} channels not divisible by group size "
+            f"{group_size} (cnn widths must be multiples of cnn_gn_size)")
+    g = C // group_size
+    xg = x.reshape(B, H, W, g, group_size).astype(jnp.float32)
     mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
     var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
     xg = (xg - mu) * jax.lax.rsqrt(var + eps)
@@ -54,12 +89,12 @@ def _gn_params(c, dtype):
     return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
 
 
-def init_basic_block(key, cin, cout, stride, dtype):
+def init_basic_block(key, cin, cmid, cout, stride, dtype):
     ks = jax.random.split(key, 3)
     p = {
-        "conv1": conv_init(ks[0], 3, 3, cin, cout, dtype),
-        "gn1": _gn_params(cout, dtype),
-        "conv2": conv_init(ks[1], 3, 3, cout, cout, dtype),
+        "conv1": conv_init(ks[0], 3, 3, cin, cmid, dtype),
+        "gn1": _gn_params(cmid, dtype),
+        "conv2": conv_init(ks[1], 3, 3, cmid, cout, dtype),
         "gn2": _gn_params(cout, dtype),
     }
     if stride != 1 or cin != cout:
@@ -68,14 +103,15 @@ def init_basic_block(key, cin, cout, stride, dtype):
     return p
 
 
-def basic_block(p, x, stride):
+def basic_block(p, x, stride, gsz):
     y = jax.nn.relu(group_norm(conv(x, p["conv1"], stride),
-                               p["gn1"]["scale"], p["gn1"]["bias"]))
-    y = group_norm(conv(y, p["conv2"]), p["gn2"]["scale"], p["gn2"]["bias"])
+                               p["gn1"]["scale"], p["gn1"]["bias"], gsz))
+    y = group_norm(conv(y, p["conv2"]), p["gn2"]["scale"], p["gn2"]["bias"],
+                   gsz)
     sc = x
     if "down" in p:
         sc = group_norm(conv(x, p["down"], stride),
-                        p["gnd"]["scale"], p["gnd"]["bias"])
+                        p["gnd"]["scale"], p["gnd"]["bias"], gsz)
     return jax.nn.relu(y + sc)
 
 
@@ -95,42 +131,42 @@ def init_bottleneck(key, cin, cmid, cout, stride, dtype):
     return p
 
 
-def bottleneck(p, x, stride):
+def bottleneck(p, x, stride, gsz):
     y = jax.nn.relu(group_norm(conv(x, p["conv1"]),
-                               p["gn1"]["scale"], p["gn1"]["bias"]))
+                               p["gn1"]["scale"], p["gn1"]["bias"], gsz))
     y = jax.nn.relu(group_norm(conv(y, p["conv2"], stride),
-                               p["gn2"]["scale"], p["gn2"]["bias"]))
-    y = group_norm(conv(y, p["conv3"]), p["gn3"]["scale"], p["gn3"]["bias"])
+                               p["gn2"]["scale"], p["gn2"]["bias"], gsz))
+    y = group_norm(conv(y, p["conv3"]), p["gn3"]["scale"], p["gn3"]["bias"],
+                   gsz)
     sc = x
     if "down" in p:
         sc = group_norm(conv(x, p["down"], stride),
-                        p["gnd"]["scale"], p["gnd"]["bias"])
+                        p["gnd"]["scale"], p["gnd"]["bias"], gsz)
     return jax.nn.relu(y + sc)
+
+
+def _block_stride(si, bi):
+    return 2 if (bi == 0 and si > 0) else 1
 
 
 def init(cfg: ArchConfig, key):
     dtype = _dt(cfg)
     ks = jax.random.split(key, 8)
-    base = cfg.cnn_widths[0]
-    p = {"stem": conv_init(ks[0], 3, 3, 3, base, dtype),
-         "gn0": _gn_params(base, dtype)}
-    cin = base
+    stem_w, outs, cmids = _widths(cfg)
+    p = {"stem": conv_init(ks[0], 3, 3, 3, stem_w, dtype),
+         "gn0": _gn_params(stem_w, dtype)}
+    cin = stem_w
     ki = 1
-    for si, (blocks, width) in enumerate(zip(cfg.cnn_blocks, cfg.cnn_widths)):
+    for si, blocks in enumerate(cfg.cnn_blocks):
         stage = {}
         for bi in range(blocks):
-            stride = 2 if (bi == 0 and si > 0) else 1
+            stride = _block_stride(si, bi)
             key_b = jax.random.fold_in(ks[min(ki, 7)], si * 100 + bi)
-            if cfg.cnn_bottleneck:
-                cmid = width * cfg.cnn_width_mult
-                cout = width * 4
-                stage[f"b{bi}"] = init_bottleneck(key_b, cin, cmid, cout,
-                                                  stride, dtype)
-                cin = cout
-            else:
-                stage[f"b{bi}"] = init_basic_block(key_b, cin, width, stride,
-                                                   dtype)
-                cin = width
+            block_init = init_bottleneck if cfg.cnn_bottleneck \
+                else init_basic_block
+            stage[f"b{bi}"] = block_init(key_b, cin, cmids[si], outs[si],
+                                         stride, dtype)
+            cin = outs[si]
         p[f"layer{si}"] = stage
     p["fc_w"] = L.dense_init(ks[7], (cin, cfg.n_classes), cin, dtype)
     p["fc_b"] = jnp.zeros((cfg.n_classes,), dtype)
@@ -138,13 +174,15 @@ def init(cfg: ArchConfig, key):
 
 
 def forward(cfg: ArchConfig, params, images):
+    gsz = cfg.cnn_gn_size
     x = jax.nn.relu(group_norm(conv(images, params["stem"]),
-                               params["gn0"]["scale"], params["gn0"]["bias"]))
+                               params["gn0"]["scale"], params["gn0"]["bias"],
+                               gsz))
     fn = bottleneck if cfg.cnn_bottleneck else basic_block
     for si, blocks in enumerate(cfg.cnn_blocks):
         for bi in range(blocks):
-            stride = 2 if (bi == 0 and si > 0) else 1
-            x = fn(params[f"layer{si}"][f"b{bi}"], x, stride)
+            x = fn(params[f"layer{si}"][f"b{bi}"], x, _block_stride(si, bi),
+                   gsz)
     x = jnp.mean(x, axis=(1, 2))
     return jnp.einsum("bc,cn->bn", x, params["fc_w"]) + params["fc_b"]
 
@@ -171,29 +209,130 @@ def conv_leaf_keys(params) -> list[str]:
             if k.split("/")[-1].startswith(("conv", "stem", "down"))]
 
 
+# ---------------------------------------------------------------------------
+# cross-layer coupling graph (mask classes spanning the model's wiring)
+# ---------------------------------------------------------------------------
+
+
+def coupling_graph(cfg: ArchConfig) -> CouplingGraph:
+    """The ResNet family's pruning coupling graph.
+
+    One class per stage-internal width (``cnn:mid{si}``: conv1/conv2
+    hidden channels of every block in the stage, with their GN params as
+    followers) and one per residual stream (``cnn:out{si}`` — or
+    ``cnn:stem`` when stage 0 opens with an identity skip, PruneTrain's
+    channel union): every branch writing into the stream (block output
+    convs, downsample convs, the stem) and every reader (next convs'
+    C_in, the downsample C_in, the fc rows behind global pooling) share
+    one mask.  Keep budgets are in GroupNorm-group units.
+    """
+    gs = cfg.cnn_gn_size
+    rate = cfg.hsadmm.keep_rate
+    stem_w, outs, cmids = _widths(cfg)
+
+    def kg(channels):
+        return keep_count(max(channels // gs, 1), rate, 1)
+
+    g = CouplingGraph()
+    cur = g.producer("cnn:stem", "stem", 3, keep=kg(stem_w),
+                     stack_ndims=0, group_size=gs)
+    g.follower(cur, "gn0/scale", 0)
+    g.follower(cur, "gn0/bias", 0)
+    cin = stem_w
+    for si, blocks in enumerate(cfg.cnn_blocks):
+        mid = None
+        cmid, cout = cmids[si], outs[si]
+        for bi in range(blocks):
+            p = f"layer{si}/b{bi}"
+            stride = _block_stride(si, bi)
+            g.consumer(cur, f"{p}/conv1", 2)     # block input: stream C_in
+            if mid is None:
+                mid = g.producer(f"cnn:mid{si}", f"{p}/conv1", 3,
+                                 keep=kg(cmid), stack_ndims=0, group_size=gs)
+            else:
+                g.consumer(mid, f"{p}/conv1", 3)
+            g.follower(mid, f"{p}/gn1/scale", 0)
+            g.follower(mid, f"{p}/gn1/bias", 0)
+            if cfg.cnn_bottleneck:
+                g.consumer(mid, f"{p}/conv2", 2)
+                g.consumer(mid, f"{p}/conv2", 3)  # cmid -> cmid: same class
+                g.follower(mid, f"{p}/gn2/scale", 0)
+                g.follower(mid, f"{p}/gn2/bias", 0)
+                g.consumer(mid, f"{p}/conv3", 2)
+                out_key, out_gn = f"{p}/conv3", f"{p}/gn3"
+            else:
+                g.consumer(mid, f"{p}/conv2", 2)
+                out_key, out_gn = f"{p}/conv2", f"{p}/gn2"
+            if stride != 1 or cin != cout:
+                # downsample branch opens a NEW stream class
+                g.consumer(cur, f"{p}/down", 2)
+                cur = g.producer(f"cnn:out{si}", f"{p}/down", 3,
+                                 keep=kg(cout), stack_ndims=0, group_size=gs)
+                g.follower(cur, f"{p}/gnd/scale", 0)
+                g.follower(cur, f"{p}/gnd/bias", 0)
+            # the block output adds into the stream: identity skips union
+            # the whole stage into one shared mask class
+            g.consumer(cur, out_key, 3)
+            g.follower(cur, f"{out_gn}/scale", 0)
+            g.follower(cur, f"{out_gn}/bias", 0)
+            cin = cout
+    g.consumer(cur, "fc_w", 0)   # conv -> fc boundary (global-pool flatten)
+    return g
+
+
 def sparsity_plan(cfg: ArchConfig, params) -> SparsityPlan:
-    """Paper §2.1 sparsity sets, one rule per conv tensor (layer-wise)."""
+    """Coupled filter/channel classes from the graph + the paper's
+    projection-only shape rules (S_s, per conv leaf).
+
+    "channel" and "filter" in ``prune_targets`` are ALIASES for the same
+    coupled plan: cross-layer alignment makes a pruned filter and the
+    consumers' pruned input channel one decision (PruneTrain), which is
+    exactly what lets physical reconfiguration shrink this family.  The
+    paper's independent per-conv S_c/S_f ablations are subsumed — a
+    masked-only, uncoupled variant would refuse `shrink_config`."""
+    from ..core.hsadmm import flatten
     from ..core.sparsity import get_leaf
     hp = cfg.hsadmm
-    rules = []
-    for key in conv_leaf_keys(params):
-        w = get_leaf(params, key)
-        kh, kw, cin, cout = w.shape
-        if "filter" in cfg.prune_targets and cout >= 16:
-            rules.append(GroupRule(
-                f"f:{key}", (LeafAxis(key, 3),), groups=cout,
-                keep=keep_count(cout, hp.keep_rate, 8), stack_ndims=0))
-        if "channel" in cfg.prune_targets and cin >= 16:
-            rules.append(GroupRule(
-                f"c:{key}", (LeafAxis(key, 2),), groups=cin,
-                keep=keep_count(cin, hp.keep_rate, 8), stack_ndims=0))
-        if "shape" in cfg.prune_targets and kh * kw > 1 and cin >= 16:
-            rules.append(GroupRule(
-                f"s:{key}", (LeafAxis(key, (0, 1, 2)),),
-                groups=kh * kw * cin,
-                keep=keep_count(kh * kw * cin, hp.keep_rate, 8),
-                stack_ndims=0))
-    return SparsityPlan(tuple(rules))
+    shapes = {k: tuple(v.shape) for k, v in flatten(params).items()}
+    rules: tuple = ()
+    if "channel" in cfg.prune_targets or "filter" in cfg.prune_targets:
+        rules = coupling_graph(cfg).plan(shapes, min_groups=2).rules
+    s_rules = []
+    if "shape" in cfg.prune_targets:
+        for key in conv_leaf_keys(params):
+            kh, kw, cin, cout = get_leaf(params, key).shape
+            if kh * kw > 1 and cin >= 16:
+                s_rules.append(GroupRule(
+                    f"s:{key}", (LeafAxis(key, (0, 1, 2)),),
+                    groups=kh * kw * cin,
+                    keep=keep_count(kh * kw * cin, hp.keep_rate, 8),
+                    stack_ndims=0))
+    return SparsityPlan(rules + tuple(s_rules))
+
+
+def shrink_config(cfg: ArchConfig, plan: SparsityPlan,
+                  budgets: dict) -> ArchConfig:
+    """ArchConfig of the physically-shrunk ResNet: per-stage stream and
+    internal widths (and the stem) are read off the coupling classes that
+    slice the corresponding conv axes — name-agnostic, so merged classes
+    (identity-skip unions, the stem joining stage 0) resolve correctly.
+    Channel sets not covered by any rule keep their full width."""
+    stem_w, outs, cmids = _widths(cfg)
+
+    def width(key, axis, default):
+        r = compacting_rule(plan, key, axis)
+        return int(budgets[r.name]) * r.group_size if r is not None \
+            else default
+
+    new_stem = width("stem", 3, stem_w)
+    new_outs, new_cmids = [], []
+    last_conv = "conv3" if cfg.cnn_bottleneck else "conv2"
+    for si, blocks in enumerate(cfg.cnn_blocks):
+        new_cmids.append(width(f"layer{si}/b0/conv1", 3, cmids[si]))
+        new_outs.append(width(f"layer{si}/b{blocks - 1}/{last_conv}", 3,
+                              outs[si]))
+    return cfg.replace(cnn_stem=new_stem, cnn_outs=tuple(new_outs),
+                       cnn_cmid=tuple(new_cmids))
 
 
 def param_specs(cfg: ArchConfig, params):

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from ..core.sparsity import SparsityPlan, keep_count
 from .api import ModelBundle, pad_to
 from . import layers as L
 
@@ -223,31 +223,33 @@ def param_specs(cfg: ArchConfig):
 
 
 def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    """Derived through :class:`core.coupling.CouplingGraph` (see
+    models/transformer.py) — FFN hidden units couple w1's C_out to b1 and
+    w2's C_in; head groups couple qkv producers to the out-proj C_in."""
+    from ..core.coupling import CouplingGraph
     hp = cfg.hsadmm
-    rules = []
+    g = CouplingGraph()
     if "ffn" in cfg.prune_targets:
         keep = keep_count(cfg.d_ff, hp.keep_rate, MODEL_AXIS_SIZE)
         for stack in ("enc", "dec"):
-            rules.append(GroupRule(
-                f"ffn_{stack}",
-                (LeafAxis(f"{stack}/mlp/w1", 2), LeafAxis(f"{stack}/mlp/b1", 1),
-                 LeafAxis(f"{stack}/mlp/w2", 1)),
-                groups=cfg.d_ff, keep=keep, stack_ndims=1,
-                shards=MODEL_AXIS_SIZE))
+            f = g.producer(f"ffn_{stack}", f"{stack}/mlp/w1", 2,
+                           groups=cfg.d_ff, keep=keep, stack_ndims=1,
+                           shards=MODEL_AXIS_SIZE)
+            g.consumer(f, f"{stack}/mlp/b1", 1)
+            g.consumer(f, f"{stack}/mlp/w2", 1)
     if "heads" in cfg.prune_targets:
         keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
         for stack, attn in (("enc", "attn"), ("dec", "attn"), ("dec", "xattn")):
-            rules.append(GroupRule(
-                f"heads_{stack}_{attn}",
-                (LeafAxis(f"{stack}/{attn}/wq", 2),
-                 LeafAxis(f"{stack}/{attn}/wk", 2),
-                 LeafAxis(f"{stack}/{attn}/wv", 2),
-                 LeafAxis(f"{stack}/{attn}/wo", 1),
-                 LeafAxis(f"{stack}/{attn}/bq", 1),
-                 LeafAxis(f"{stack}/{attn}/bk", 1),
-                 LeafAxis(f"{stack}/{attn}/bv", 1)),
-                groups=cfg.n_kv_heads, keep=keep, stack_ndims=1))
-    return SparsityPlan(tuple(rules))
+            h = g.producer(f"heads_{stack}_{attn}", f"{stack}/{attn}/wq", 2,
+                           groups=cfg.n_kv_heads, keep=keep, stack_ndims=1)
+            for key, ax in ((f"{stack}/{attn}/wk", 2),
+                            (f"{stack}/{attn}/wv", 2),
+                            (f"{stack}/{attn}/wo", 1),
+                            (f"{stack}/{attn}/bq", 1),
+                            (f"{stack}/{attn}/bk", 1),
+                            (f"{stack}/{attn}/bv", 1)):
+                g.consumer(h, key, ax)
+    return g.plan()
 
 
 def cache_specs(cfg: ArchConfig, B: int, S: int, data_axes) -> dict:

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from ..core.sparsity import SparsityPlan, keep_count
 from .api import ModelBundle, pad_to, specs_like
 from . import layers as L
 
@@ -158,30 +158,32 @@ def param_specs(cfg: ArchConfig):
 
 
 def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    """Derived through the cross-layer :class:`core.coupling.CouplingGraph`
+    — the transformer's mask classes are the trivially self-coupled case
+    (producer and all consumers inside one scanned block), but they run
+    through the same alignment mechanism as the CNN family's cross-layer
+    classes, so there is exactly one producer->consumer rule machinery."""
+    from ..core.coupling import CouplingGraph
     hp = cfg.hsadmm
-    rules = []
+    g = CouplingGraph()
     if "ffn" in cfg.prune_targets:
         keep = keep_count(cfg.d_ff, hp.keep_rate, MODEL_AXIS_SIZE)
-        rules.append(GroupRule(
-            "ffn",
-            (LeafAxis("blocks/mlp/wg", 2), LeafAxis("blocks/mlp/wu", 2),
-             LeafAxis("blocks/mlp/wd", 1)),
-            groups=cfg.d_ff, keep=keep, stack_ndims=1,
-            shards=MODEL_AXIS_SIZE))
+        ffn = g.producer("ffn", "blocks/mlp/wg", 2, groups=cfg.d_ff,
+                         keep=keep, stack_ndims=1, shards=MODEL_AXIS_SIZE)
+        g.consumer(ffn, "blocks/mlp/wu", 2)       # tied gate/up producers
+        g.consumer(ffn, "blocks/mlp/wd", 1)       # down-proj C_in
     if "heads" in cfg.prune_targets:
         keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
-        leaves = [LeafAxis("blocks/attn/wq", 2),
-                  LeafAxis("blocks/attn/wk", 2),
-                  LeafAxis("blocks/attn/wv", 2),
-                  LeafAxis("blocks/attn/wo", 1)]
+        h = g.producer("heads", "blocks/attn/wq", 2, groups=cfg.n_kv_heads,
+                       keep=keep, stack_ndims=1)
+        g.consumer(h, "blocks/attn/wk", 2)
+        g.consumer(h, "blocks/attn/wv", 2)
+        g.consumer(h, "blocks/attn/wo", 1)        # out-proj C_in
         if cfg.qkv_bias:
-            leaves += [LeafAxis("blocks/attn/bq", 1),
-                       LeafAxis("blocks/attn/bk", 1),
-                       LeafAxis("blocks/attn/bv", 1)]
-        rules.append(GroupRule("heads", tuple(leaves),
-                               groups=cfg.n_kv_heads, keep=keep,
-                               stack_ndims=1))
-    return SparsityPlan(tuple(rules))
+            g.consumer(h, "blocks/attn/bq", 1)
+            g.consumer(h, "blocks/attn/bk", 1)
+            g.consumer(h, "blocks/attn/bv", 1)
+    return g.plan()
 
 
 def shrink_config(cfg: ArchConfig, plan: SparsityPlan,

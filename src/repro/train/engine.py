@@ -155,8 +155,10 @@ class Engine:
         """
         import dataclasses as _dc
 
-        from ..core.hsadmm import identity_mask_state
-        from ..core.shrinkage import compact_state, shrunk_plan
+        from ..core.hsadmm import flatten, identity_mask_state
+        from ..core.shrinkage import (compact_state, compacting_rule,
+                                      shrunk_plan,
+                                      shrunk_projection_mask_state)
         from ..models import build as _build, shrink_config
         if self.reconfigured:
             raise ValueError("engine is already reconfigured")
@@ -166,8 +168,10 @@ class Engine:
             masks = state["masks"]
         spec = self.spec
         budgets = spec.budgets
+        p0 = jax.eval_shape(self.bundle.init, jax.random.PRNGKey(0))
+        param_shapes = {k: tuple(v.shape) for k, v in flatten(p0).items()}
         new_cfg = shrink_config(self.cfg, spec.plan, budgets)
-        new_plan = shrunk_plan(spec.plan, budgets)
+        new_plan = shrunk_plan(spec.plan, budgets, param_shapes)
         bundle2 = _dc.replace(_build(new_cfg), cfg=new_cfg, plan=new_plan)
         eng2 = Engine(bundle2, self.mesh, self.shape,
                       consensus=self.consensus, extra_fsdp=self.extra_fsdp)
@@ -184,9 +188,17 @@ class Engine:
             new_masks = {}
             for r2 in new_plan.rules:
                 old = st["masks"][r2.name]
-                if plan.rule(r2.name).compactable:
+                r1 = plan.rule(r2.name)
+                if r1.compactable:
                     new_masks[r2.name] = identity_mask_state(
                         r2, old["mask"].shape[:-1], budgets[r2.name])
+                elif any(compacting_rule(plan, la.key, a) is not None
+                         for la in r1.all_leaves for a in la.axes):
+                    # projection-only composite rule riding a compacted
+                    # sub-axis (S_s over a shrunk C_in): gather the
+                    # frozen mask onto the kept channels
+                    new_masks[r2.name] = shrunk_projection_mask_state(
+                        r1, r2, old, plan, idxs, param_shapes)
                 else:
                     new_masks[r2.name] = dict(
                         old, drift=jnp.zeros((), jnp.float32))

@@ -1,0 +1,347 @@
+"""Cross-layer coupling graph (core.coupling): mask classes spanning the
+model wiring, follower leaves, GroupNorm-group-granular pruning, and the
+composition of projection-only shape rules with physical slicing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ConsensusSpec, HsadmmConfig
+from repro.core import (CouplingGraph, EngineSpec, compact_state,
+                        expand_state, init_state, shrunk_plan)
+from repro.core.masks import MaskSyncConfig, sync_masks
+from repro.core.shrinkage import (compact_params, compacting_rule,
+                                  expand_params, plan_payload_shapes,
+                                  shrunk_projection_mask_state)
+from repro.core.sparsity import (GroupRule, LeafAxis, SparsityPlan,
+                                 apply_mask_rule, channel_idx, group_scores,
+                                 keep_count, project)
+from repro.models import build, shrink_config
+from repro.models.cnn import forward, group_norm
+
+
+# ---------------------------------------------------------------------------
+# graph mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_graph_components_become_classes():
+    g = CouplingGraph()
+    a = g.producer("w0", "conv_a", 3, keep=4, group_size=1)
+    g.consumer(a, "conv_b", 2)
+    g.follower(a, "gn_a/scale", 0)
+    b = g.producer("w1", "conv_b", 3, keep=2)
+    g.consumer(b, "fc", 0)
+    shapes = {"conv_a": (3, 3, 8, 16), "conv_b": (3, 3, 16, 8),
+              "gn_a/scale": (16,), "fc": (8, 10)}
+    classes = g.classes(shapes)
+    assert [c.name for c in classes] == ["w0", "w1"]
+    c0 = classes[0]
+    assert c0.members == (LeafAxis("conv_a", 3), LeafAxis("conv_b", 2))
+    assert c0.followers == (LeafAxis("gn_a/scale", 0),)
+    assert c0.groups == 16 and c0.keep == 4
+    assert classes[1].groups == 8
+
+
+def test_graph_residual_merge_unions_classes():
+    """Skip addition: merging two labelled classes keeps the earliest
+    label and unions the member sets (PruneTrain's channel union)."""
+    g = CouplingGraph()
+    a = g.producer("stream", "conv_a", 3, keep=2)
+    b = g.producer("branch", "conv_b", 3, keep=2)
+    g.merge(a, b)
+    g.consumer(b, "conv_c", 2)   # attaching via either handle lands in one
+    shapes = {"conv_a": (3, 3, 4, 16), "conv_b": (1, 1, 4, 16),
+              "conv_c": (3, 3, 16, 4)}
+    classes = g.classes(shapes)
+    assert len(classes) == 1 and classes[0].name == "stream"
+    assert len(classes[0].members) == 3
+    # merging classes with DIFFERENT rule attributes must not silently
+    # drop one side's keep/group_size — it raises instead
+    g3 = CouplingGraph()
+    x = g3.producer("a", "w1", 0, keep=2)
+    y = g3.producer("b", "w2", 0, keep=4)
+    with pytest.raises(ValueError, match="rule attributes differ"):
+        g3.merge(x, y)
+
+
+def test_graph_rejects_unlabelled_and_mismatched():
+    g = CouplingGraph()
+    g.add("conv_a", 3)
+    with pytest.raises(ValueError, match="unlabelled"):
+        g.classes({"conv_a": (3, 3, 4, 16)})
+    g2 = CouplingGraph()
+    a = g2.producer("w", "conv_a", 3, keep=2)
+    g2.consumer(a, "conv_b", 2)
+    with pytest.raises(ValueError, match="extent"):
+        g2.classes({"conv_a": (3, 3, 4, 16), "conv_b": (3, 3, 8, 4)})
+
+
+def test_transformer_plan_rederives_through_graph():
+    """The dense-transformer family's rules come out of the SAME graph
+    mechanism — byte-identical to the handwritten multi-leaf rules."""
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    plan = build(cfg).plan
+    hp = cfg.hsadmm
+    legacy = [GroupRule(
+        "ffn", (LeafAxis("blocks/mlp/wg", 2), LeafAxis("blocks/mlp/wu", 2),
+                LeafAxis("blocks/mlp/wd", 1)),
+        groups=cfg.d_ff, keep=keep_count(cfg.d_ff, hp.keep_rate, 16),
+        stack_ndims=1, shards=16)]
+    if "heads" in cfg.prune_targets:
+        legacy.append(GroupRule(
+            "heads", (LeafAxis("blocks/attn/wq", 2),
+                      LeafAxis("blocks/attn/wk", 2),
+                      LeafAxis("blocks/attn/wv", 2),
+                      LeafAxis("blocks/attn/wo", 1)),
+            groups=cfg.n_kv_heads,
+            keep=keep_count(cfg.n_kv_heads, hp.keep_rate, 2), stack_ndims=1))
+    assert plan == SparsityPlan(tuple(legacy))
+
+
+# ---------------------------------------------------------------------------
+# followers + block-granular (group_size) rule semantics
+# ---------------------------------------------------------------------------
+
+
+def _blocked_rule(C=16, gs=4, keep=2):
+    return GroupRule("w", (LeafAxis("conv", 3), LeafAxis("nxt", 2)),
+                     groups=C // gs, keep=keep, stack_ndims=0,
+                     followers=(LeafAxis("gn/scale", 0),
+                                LeafAxis("gn/bias", 0)),
+                     group_size=gs)
+
+
+def _blocked_params(key, C=16):
+    ks = jax.random.split(key, 3)
+    return {"conv": jax.random.normal(ks[0], (3, 3, 8, C)),
+            "nxt": jax.random.normal(ks[1], (3, 3, C, 8)),
+            "gn": {"scale": jax.random.normal(ks[2], (C,)),
+                   "bias": jnp.ones((C,))}}
+
+
+def test_followers_ride_mask_but_do_not_vote():
+    rule = _blocked_rule()
+    p = _blocked_params(jax.random.PRNGKey(0))
+    s = group_scores(p, rule)
+    assert s.shape == (4,)
+    # scores pool channel blocks over the scored members only
+    expect = (jnp.sum(p["conv"] ** 2, axis=(0, 1, 2))
+              + jnp.sum(p["nxt"] ** 2, axis=(0, 1, 3))).reshape(4, 4).sum(-1)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(expect), rtol=1e-5)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    out = apply_mask_rule(dict(p), rule, mask)
+    # block-unit mask expands to channels on members AND followers
+    assert np.all(np.asarray(out["conv"][..., 4:8]) == 0)
+    assert np.all(np.asarray(out["nxt"][..., 4:8, :]) == 0)
+    assert np.all(np.asarray(out["gn"]["scale"][4:8]) == 0)
+    assert np.all(np.asarray(out["gn"]["bias"][12:16]) == 0)
+    np.testing.assert_array_equal(np.asarray(out["conv"][..., :4]),
+                                  np.asarray(p["conv"][..., :4]))
+
+
+def test_blocked_compact_expand_roundtrip_covers_followers():
+    rule = _blocked_rule()
+    plan = SparsityPlan((rule,))
+    p = _blocked_params(jax.random.PRNGKey(1))
+    idx = jnp.asarray([0, 2], jnp.int32)           # kept blocks
+    np.testing.assert_array_equal(
+        np.asarray(channel_idx(rule, idx)),
+        np.asarray([0, 1, 2, 3, 8, 9, 10, 11]))
+    c = compact_params(dict(p), plan, {"w": idx})
+    assert c["conv"].shape == (3, 3, 8, 8)
+    assert c["nxt"].shape == (3, 3, 8, 8)
+    assert c["gn"]["scale"].shape == (8,)
+    shapes = plan_payload_shapes(
+        {"conv": (3, 3, 8, 16), "nxt": (3, 3, 16, 8), "gn/scale": (16,),
+         "gn/bias": (16,)}, plan, {"w": 2})
+    assert shapes["conv"] == (3, 3, 8, 8) and shapes["gn/scale"] == (8,)
+    e = expand_params(c, plan, {"w": idx}, {"w": 4})
+    mask = np.repeat(np.asarray([1, 0, 1, 0], np.float32), 4)
+    np.testing.assert_allclose(np.asarray(e["conv"]),
+                               np.asarray(p["conv"]) * mask, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e["gn"]["bias"]),
+                               np.asarray(p["gn"]["bias"]) * mask, rtol=1e-6)
+
+
+def test_bitwise_or_balanced_raises_value_error():
+    """The old bare assert vanished under python -O; the failure must be a
+    ValueError naming the offending rule."""
+    rule = GroupRule("ffn", (LeafAxis("w", 1),), groups=8, keep=4,
+                     stack_ndims=0, shards=4)
+    scores = jnp.ones((2, 8))
+    with pytest.raises(ValueError, match="ffn"):
+        sync_masks(scores, rule, MaskSyncConfig(mode="bitwise_or"))
+
+
+# ---------------------------------------------------------------------------
+# GroupNorm: deterministic group derivation + reconfiguration invariance
+# ---------------------------------------------------------------------------
+
+
+def test_group_norm_groups_derived_from_config():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 12))
+    with pytest.raises(ValueError, match="divisible"):
+        group_norm(x, jnp.ones((12,)), jnp.zeros((12,)), group_size=8)
+
+
+def test_group_norm_masked_full_equals_reconfigured():
+    """THE regression the old `while C % g: g -= 1` fallback broke: with
+    whole-normalization-group pruning, the full-shape masked GN output at
+    the kept channels equals GN on the physically sliced tensor, and the
+    dropped channels are exactly zero.  (The drifting-group fallback
+    repartitioned the shrunk channels and changed every statistic.)"""
+    C, gsz = 32, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 4, 4, C))
+    scale = jax.random.normal(jax.random.fold_in(key, 1), (C,))
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (C,))
+    mask = np.zeros((C,), np.float32)
+    kept = np.r_[0:8, 16:24]                      # whole GN groups 0 and 2
+    mask[kept] = 1.0
+    m = jnp.asarray(mask)
+    full = group_norm(x * m, scale * m, bias * m, gsz)
+    comp = group_norm(x[..., kept], scale[kept], bias[kept], gsz)
+    np.testing.assert_allclose(np.asarray(full[..., kept]),
+                               np.asarray(comp), rtol=1e-5, atol=1e-6)
+    assert np.all(np.asarray(full)[..., mask == 0] == 0.0)
+
+
+@pytest.mark.parametrize("arch", ["resnet18", "resnet152"])
+def test_cnn_masked_forward_equals_pruned_dense_forward(arch):
+    """Model level: project params onto the coupled plan, then physically
+    slice them — the shrunk-dense forward equals the masked full-shape
+    forward (GN statistics included).  This is the property PruneX's
+    serving claim (Table 1) and the reconfigured round both rest on."""
+    from repro.launch.serve import pruned_serving_bundle
+    cfg = get_config(arch, smoke=True)
+    b = build(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    b2, compact, _ = pruned_serving_bundle(b, params)
+    proj, _ = project(params, b.plan)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, cfg.img_size, cfg.img_size, 3))
+    out_full = forward(cfg, proj, imgs)
+    out_comp = forward(b2.cfg, compact, imgs)
+    np.testing.assert_allclose(np.asarray(out_comp), np.asarray(out_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# CNN shrink_config width mapping
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_shrink_config_maps_all_widths():
+    cfg = get_config("resnet18", smoke=True)       # widths (16, 32), keep .5
+    bundle = build(cfg)
+    budgets = {r.name: r.keep for r in bundle.plan.rules}
+    cfg2 = shrink_config(cfg, bundle.plan, budgets, strict=True)
+    assert cfg2.cnn_stem == 8                      # stream0 (merged stem)
+    assert cfg2.cnn_outs == (8, 16)
+    assert cfg2.cnn_cmid == (8, 16)
+    assert cfg.cnn_outs == ()                      # original untouched
+    # bottleneck: separate stem class, cmid != stream width
+    cfgb = get_config("resnet152", smoke=True)     # widths (16,16) -> out 64
+    bb = build(cfgb)
+    cfgb2 = shrink_config(cfgb, bb.plan,
+                          {r.name: r.keep for r in bb.plan.rules})
+    assert cfgb2.cnn_stem == 8
+    assert cfgb2.cnn_outs == (32, 32) and cfgb2.cnn_cmid == (8, 8)
+    shrunk = build(cfgb2)
+    p = jax.eval_shape(shrunk.init, jax.random.PRNGKey(0))
+    assert p["layer0"]["b0"]["conv3"].shape == (1, 1, 8, 32)
+    assert p["fc_w"].shape == (32, cfgb.n_classes)
+
+
+# ---------------------------------------------------------------------------
+# S_s (shape) rules compose with S_f/S_c slicing through the state
+# ---------------------------------------------------------------------------
+
+
+def _sfc_plan(Cin=16, Cout=24):
+    return SparsityPlan((
+        GroupRule("f", (LeafAxis("w", 3),), groups=Cout, keep=12,
+                  stack_ndims=0),
+        GroupRule("c", (LeafAxis("w", 2),), groups=Cin, keep=8,
+                  stack_ndims=0),
+        GroupRule("s", (LeafAxis("w", (0, 1, 2)),), groups=9 * Cin,
+                  keep=9 * Cin // 2, stack_ndims=0),
+    ))
+
+
+def test_shape_rule_composes_through_state_roundtrip():
+    """Satellite: projection-only composite (KH,KW,Cin) masks on a conv
+    leaf ride compact_state/expand_state alongside S_f/S_c slicing of the
+    same leaf — the roundtrip reproduces the triple-masked leaf exactly
+    and reinstates the full-shape mask state."""
+    Cin, Cout, W = 16, 24, 4
+    key = jax.random.PRNGKey(0)
+    plan = _sfc_plan(Cin, Cout)
+    spec = EngineSpec(plan=plan,
+                      consensus=ConsensusSpec(levels=(2, 2),
+                                              compact_from_level=1),
+                      hp=HsadmmConfig(rho1=1.0, rho2=1.0), stack_map=())
+    params0 = {"w": jax.random.normal(key, (3, 3, Cin, Cout))}
+    state = init_state(params0, spec)
+
+    def kept_mask(n, keep, seed):
+        idx = jnp.sort(jax.random.permutation(
+            jax.random.PRNGKey(seed), n)[:keep]).astype(jnp.int32)
+        return idx, jnp.zeros((n,)).at[idx].set(1.0)
+    idx_f, m_f = kept_mask(Cout, 12, 1)
+    idx_c, m_c = kept_mask(Cin, 8, 2)
+    idx_s, m_s = kept_mask(9 * Cin, 9 * Cin // 2, 3)
+    masks = {n: {"idx": i, "valid": jnp.ones(i.shape, jnp.float32),
+                 "mask": m, "drift": jnp.zeros((), jnp.float32)}
+             for n, i, m in (("f", idx_f, m_f), ("c", idx_c, m_c),
+                             ("s", idx_s, m_s))}
+    # theta projected under ALL three rules (the frozen-state invariant)
+    theta = jax.random.normal(jax.random.fold_in(key, 9),
+                              (W, 3, 3, Cin, Cout))
+    proj = theta * m_s.reshape(3, 3, Cin)[None, :, :, :, None] \
+        * m_c[None, None, None, :, None] * m_f[None, None, None, None, :]
+    state["theta"] = {"w": proj}
+    state["masks"] = masks
+
+    budgets = spec.budgets
+    idxs = {r.name: masks[r.name]["idx"] for r in plan.rules}
+    new_plan = shrunk_plan(plan, budgets,
+                           param_shapes={"w": (3, 3, Cin, Cout)})
+    assert new_plan.rule("s").groups == 9 * 8      # Cin sliced under it
+    new_masks = {}
+    from repro.core.hsadmm import identity_mask_state
+    for r2 in new_plan.rules:
+        if plan.rule(r2.name).compactable:
+            new_masks[r2.name] = identity_mask_state(r2, (),
+                                                     budgets[r2.name])
+        else:
+            new_masks[r2.name] = shrunk_projection_mask_state(
+                plan.rule(r2.name), r2, masks[r2.name], plan, idxs,
+                {"w": (3, 3, Cin, Cout)})
+    st_c = compact_state(state, plan, idxs, new_masks,
+                         (spec.boundary_compact(1),
+                          spec.boundary_compact(2)))
+    assert st_c["theta"]["w"].shape == (W, 3, 3, 8, 12)
+    assert st_c["masks"]["s"]["mask"].shape == (9 * 8,)
+    # the gathered S_s mask equals the full mask at the kept channels
+    np.testing.assert_array_equal(
+        np.asarray(st_c["masks"]["s"]["mask"]).reshape(3, 3, 8),
+        np.asarray(m_s).reshape(3, 3, Cin)[:, :, np.asarray(idx_c)])
+
+    fulls = {r.name: r.groups for r in plan.rules}
+    st_f = expand_state(st_c, plan, idxs, fulls, masks)
+    np.testing.assert_allclose(np.asarray(st_f["theta"]["w"]),
+                               np.asarray(proj), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st_f["masks"]["s"]["mask"]),
+                                  np.asarray(m_s))
+
+
+def test_shrunk_plan_requires_shapes_for_overlap():
+    plan = _sfc_plan()
+    budgets = {"f": 12, "c": 8, "s": 72}
+    with pytest.raises(ValueError, match="param_shapes"):
+        shrunk_plan(plan, budgets)
+    assert compacting_rule(plan, "w", 2).name == "c"
+    assert compacting_rule(plan, "w", 0) is None

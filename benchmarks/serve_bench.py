@@ -1,0 +1,209 @@
+"""Serving-tier load generator: pruned vs dense throughput and latency.
+
+Drives :class:`repro.serve.ReplicaPool` with a generated request trace
+(Poisson arrivals or an all-at-once saturating burst) against the SAME
+trace for the dense and the physically-pruned build of each model, and
+reports p50/p99 request latency, p50/p99 TTFT, and tokens-or-images/sec.
+Writes ``BENCH_serve.json`` at the repo root — the serving half of the
+paper's Table 1 claim (a structurally pruned model is a genuinely
+smaller dense model, so it serves faster with a smaller cache).
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick
+    PYTHONPATH=src python -m benchmarks.serve_bench --check-recompiles
+
+``--check-recompiles`` exits non-zero if any measured loop compiled
+anything after warmup — the CI guard for the AOT bucket grid: steady-
+state serving must dispatch only ahead-of-time executables.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from collections import deque
+
+import jax
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_trace(rng, n, *, qps, vocab, max_prompt, max_new, mode, img_size):
+    """``[(arrival_s, request_kwargs), ...]`` — Poisson arrivals at
+    ``qps`` (0 = saturating burst: everything arrives at t=0), mixed
+    prompt/generation lengths."""
+    t, out = 0.0, []
+    for i in range(n):
+        if qps > 0:
+            t += float(rng.exponential(1.0 / qps))
+        if mode == "generate":
+            p = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
+            g = int(rng.integers(max(1, max_new // 2), max_new + 1))
+            kw = dict(rid=i, max_new=g,
+                      prompt=rng.integers(0, vocab, size=(p,)))
+        else:
+            kw = dict(rid=i, image=rng.normal(
+                size=(img_size, img_size, 3)).astype(np.float32))
+        out.append((t, kw))
+    return out
+
+
+def drive(pool, trace):
+    """Feed the trace into the pool by wall clock; returns
+    ``(completions, wall_s)``.  Request latency counts from the SCHEDULED
+    arrival (queueing under load is part of the number)."""
+    from repro.serve import Request
+    pending = deque(trace)
+    t0 = time.perf_counter()
+    comps = []
+    while pending or not pool.idle:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            t_arr, kw = pending.popleft()
+            pool.submit(Request(t_arrival=t0 + t_arr, **kw))
+        if not pool.idle:
+            comps.extend(pool.step())
+        elif pending:
+            time.sleep(min(pending[0][0] - now, 0.005))
+    return comps, time.perf_counter() - t0
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def bench_arch(arch, *, requests, qps, max_prompt, max_new, lanes,
+               replicas, seed, log=print):
+    from repro.configs import get_config
+    from repro.dist.monitor import compile_count
+    from repro.launch.serve import pruned_serving_bundle
+    from repro.models import build
+    from repro.serve import BucketEngine, ReplicaPool, spec_for_workload
+
+    cfg = get_config(arch, smoke=True)
+    base = build(cfg)
+    params0 = base.init(jax.random.PRNGKey(seed))
+    mode = "generate" if base.decode is not None else "classify"
+    rows = []
+    for variant in ("dense", "pruned"):
+        if variant == "dense":
+            bundle, params = base, params0
+        else:
+            bundle, params, _ = pruned_serving_bundle(base, params0)
+        spec = spec_for_workload(
+            max_prompt, max_new, lanes=lanes,
+            batch_buckets=(1, 2) if mode == "generate"
+            else (1, max(2, min(requests, 8))))
+        t0 = time.perf_counter()
+        engine = BucketEngine(bundle, spec, params_like=params)
+        compile_s = time.perf_counter() - t0
+        pool = ReplicaPool(engine, params, replicas=replicas)
+
+        # warmup: touch every executable class once, then measure with a
+        # compile counter around the whole driven loop
+        warm = make_trace(np.random.default_rng(seed + 1), 2, qps=0,
+                          vocab=cfg.vocab, max_prompt=max_prompt,
+                          max_new=max_new, mode=mode,
+                          img_size=getattr(cfg, "img_size", 0))
+        drive(pool, warm)
+        d0 = dict(pool.dispatches)
+        trace = make_trace(np.random.default_rng(seed), requests, qps=qps,
+                           vocab=cfg.vocab, max_prompt=max_prompt,
+                           max_new=max_new, mode=mode,
+                           img_size=getattr(cfg, "img_size", 0))
+        with compile_count() as st:
+            comps, wall = drive(pool, trace)
+        lat = [c.latency for c in comps]
+        ttft = [c.ttft for c in comps]
+        toks = pool.tokens_out if mode == "generate" else len(comps)
+        row = {
+            "model": arch, "variant": variant, "mode": mode,
+            "requests": len(comps), "replicas": replicas,
+            "throughput": toks / max(wall, 1e-9),
+            "unit": "tok/s" if mode == "generate" else "img/s",
+            "p50_latency_s": _pct(lat, 50), "p99_latency_s": _pct(lat, 99),
+            "p50_ttft_s": _pct(ttft, 50), "p99_ttft_s": _pct(ttft, 99),
+            "wall_s": wall, "compile_s": compile_s,
+            "executables": engine.num_executables,
+            "cache_bytes": engine.cache_bytes(),
+            "steady_compiles": st.compiles,
+            "dispatches": {k: v - d0.get(k, 0)
+                           for k, v in pool.dispatches.items()},
+        }
+        if mode == "generate":
+            row["widths"] = {"d_ff": bundle.cfg.d_ff,
+                             "n_kv_heads": bundle.cfg.n_kv_heads}
+        else:
+            row["widths"] = {"stem": bundle.cfg.cnn_stem,
+                             "streams": list(bundle.cfg.cnn_outs)}
+        rows.append(row)
+        log(f"[serve_bench] {arch:16s} {variant:6s} "
+            f"{row['throughput']:8.1f} {row['unit']}  "
+            f"p50 {row['p50_latency_s']*1e3:7.1f} ms  "
+            f"p99 {row['p99_latency_s']*1e3:7.1f} ms  "
+            f"cache {row['cache_bytes']:8d} B  "
+            f"compiles(steady) {st.compiles}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="+",
+                    default=["tinyllama-1.1b", "resnet18"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="Poisson arrival rate; 0 = saturating burst")
+    ap.add_argument("--max-prompt", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="short fixed trace (the CI smoke)")
+    ap.add_argument("--check-recompiles", action="store_true",
+                    help="exit non-zero if any measured loop compiled "
+                         "after warmup")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.requests = min(args.requests, 8)
+
+    rows = []
+    for arch in args.archs:
+        rows += bench_arch(arch, requests=args.requests, qps=args.qps,
+                           max_prompt=args.max_prompt, max_new=args.max_new,
+                           lanes=args.lanes, replicas=args.replicas,
+                           seed=args.seed)
+    speedup = {}
+    by = {(r["model"], r["variant"]): r for r in rows}
+    for arch in args.archs:
+        d, p = by.get((arch, "dense")), by.get((arch, "pruned"))
+        if d and p and d["throughput"] > 0:
+            speedup[arch] = p["throughput"] / d["throughput"]
+    out = {
+        "config": {k: getattr(args, k) for k in
+                   ("archs", "requests", "qps", "max_prompt", "max_new",
+                    "lanes", "replicas", "seed")},
+        "rows": rows,
+        "pruned_over_dense_throughput": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"[serve_bench] wrote {args.out}")
+    for arch, s in speedup.items():
+        print(f"[serve_bench] {arch}: pruned/dense throughput {s:.2f}x")
+    bad = [r for r in rows if r["steady_compiles"]]
+    if bad:
+        print(f"[serve_bench] steady-state recompiles detected in "
+              f"{[(r['model'], r['variant']) for r in bad]}")
+        if args.check_recompiles:
+            return 1
+    elif args.check_recompiles:
+        print("[serve_bench] zero steady-state recompiles: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,19 @@
-"""Serving launcher: batched greedy decoding with a KV/SSM cache, and the
-physically-shrunk ("pruned dense") serving mode — the paper's inference
-acceleration claim: structured pruning yields a genuinely SMALLER dense
-model (Table 1, last column).
+"""Serving launcher: thin CLI over the ``repro.serve`` continuous-batching
+tier, including the physically-shrunk ("pruned dense") serving mode — the
+paper's inference acceleration claim: structured pruning yields a genuinely
+SMALLER dense model (Table 1, last column).
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
         --smoke --batch 2 --prompt-len 16 --gen 8 --pruned
+
+    # serve a training checkpoint (possibly saved by a reconfigured run)
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
+        --smoke --ckpt /tmp/run1 --replicas 2
+
+The heavy lifting lives in :mod:`repro.serve`: :class:`BucketEngine`
+compiles the per-bucket executable grid ahead of time,
+:class:`ContinuousScheduler` runs the admit/decode/retire loop, and
+:class:`ReplicaPool` serves N data-parallel replicas off one checkpoint.
 """
 from __future__ import annotations
 
@@ -16,10 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..core.hsadmm import flatten, unflatten
+from ..configs.base import ConsensusSpec
 from ..core.shrinkage import compact_params
 from ..core.sparsity import project
 from ..models import build
+from ..serve import (BucketEngine, ReplicaPool, Request, spec_for_workload)
 
 
 def prune_params_compact(bundle, params):
@@ -78,55 +88,135 @@ def serving_bundle_from_state(engine, state):
     return eng2.bundle, compact
 
 
+def bundle_from_checkpoint(ckpt_dir: str, *, arch: str = None,
+                           smoke: bool = False, cfg=None, log=None):
+    """Restore a serving ``(bundle, params)`` from a training checkpoint.
+
+    Mirrors the training loop's resume path: pick the newest complete
+    save, read its meta FIRST to learn whether the run had physically
+    reconfigured (shrunk shapes + frozen masks in the aux channel), build
+    the matching engine, ``restore_elastic`` into its state template, and
+    route the result through :func:`serving_bundle_from_state` — so a
+    reconfigured save serves at the shrunk widths with no round-trip
+    expansion, and a full-shape save is compacted with exactly the mask
+    state the run converged to.
+    """
+    from ..dist import checkpoint as ckpt
+    from ..train.engine import Engine
+    from ..train.loop import _masks_from_aux
+    from .mesh import make_host_mesh
+
+    last = ckpt.latest(ckpt_dir)
+    if last is None:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir!r}")
+    meta = ckpt.read_meta(last)
+    if cfg is None:
+        # cfg override: a save whose run customized the arch/hsadmm
+        # config needs the SAME config to rebuild matching plan shapes
+        cfg = get_config(arch or meta.get("arch"), smoke=smoke)
+    if meta.get("arch") not in (None, cfg.name) and log:
+        log(f"[serve] WARNING: checkpoint arch {meta['arch']!r} != "
+            f"requested {cfg.name!r}")
+    bundle = build(cfg)
+    levels = tuple(meta.get("levels") or (1,))
+    engine = Engine(bundle, make_host_mesh(),
+                    consensus=ConsensusSpec(levels=levels,
+                                            compact_from_level=1))
+    restore_eng = engine
+    if meta.get("reconfigured"):
+        masks_full = _masks_from_aux(ckpt.load_aux(last), bundle.plan)
+        restore_eng, _ = engine.reconfigure(masks=masks_full)
+    tmpl = jax.eval_shape(
+        lambda: restore_eng.init_state_fn()(jax.random.PRNGKey(0)))
+    tmpl = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
+    state, meta2 = ckpt.restore_elastic(last, tmpl, engine.workers)
+    state = jax.device_put(state, restore_eng.state_shardings())
+    if log:
+        log(f"[serve] restored {last} (step {meta2.get('step')}"
+            + (", reconfigured" if meta.get("reconfigured") else "") + ")")
+    serve_bundle, params = serving_bundle_from_state(restore_eng, state)
+    return serve_bundle, params, meta
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="number of requests to serve")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--pruned", action="store_true",
                     help="serve the physically-shrunk model")
+    ap.add_argument("--ckpt", default=None, metavar="DIR",
+                    help="restore weights (and pruning state) from a "
+                         "training checkpoint directory")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel serving replicas off one "
+                         "checkpoint")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="decode lanes per sequence bucket")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    bundle = build(cfg)
     key = jax.random.PRNGKey(0)
-    params = bundle.init(key)
-    if args.pruned:
-        bundle, params, _ = pruned_serving_bundle(bundle, params)
+    if args.ckpt:
+        bundle, params, _ = bundle_from_checkpoint(
+            args.ckpt, arch=args.arch, smoke=args.smoke, log=print)
+    else:
+        bundle = build(cfg)
+        params = bundle.init(key)
+        if args.pruned:
+            bundle, params, _ = pruned_serving_bundle(bundle, params)
+    if args.pruned or args.ckpt:
         if cfg.family == "cnn":
-            print(f"[serve] pruned model: widths -> stem {bundle.cfg.cnn_stem}"
-                  f", streams {bundle.cfg.cnn_outs}, mid {bundle.cfg.cnn_cmid}")
+            print(f"[serve] serving widths: stem {bundle.cfg.cnn_stem}, "
+                  f"streams {bundle.cfg.cnn_outs}, mid {bundle.cfg.cnn_cmid}")
         else:
-            print(f"[serve] pruned model: d_ff -> {bundle.cfg.d_ff}")
+            print(f"[serve] serving widths: d_ff {bundle.cfg.d_ff}, "
+                  f"kv heads {bundle.cfg.n_kv_heads}")
 
     B, P, G = args.batch, args.prompt_len, args.gen
-    S = P + G
-    tokens = jax.random.randint(key, (B, P), 0, cfg.vocab, jnp.int32)
-    cache = bundle.init_cache(B, S)
-    extras = {}
-    for name, shp, dt in bundle.extra_inputs:
-        extras[name] = jnp.zeros((B,) + shp(None), dt)
+    if bundle.decode is None:      # CNN family: batched classify requests
+        spec = spec_for_workload(P, G, lanes=args.lanes,
+                                 batch_buckets=(1, max(B, 1)))
+    else:
+        spec = spec_for_workload(P, G, lanes=args.lanes,
+                                 batch_buckets=(1, 2))
+    t0 = time.time()
+    engine = BucketEngine(bundle, spec, params_like=params)
+    print(f"[serve] compiled {engine.num_executables} executables in "
+          f"{time.time() - t0:.1f}s; cache {engine.cache_bytes()} B "
+          f"across seq buckets {spec.seq_buckets}")
+    pool = ReplicaPool(engine, params, replicas=args.replicas)
 
+    rng = np.random.default_rng(0)
+    if bundle.decode is None:
+        s = bundle.cfg.img_size
+        for i in range(B):
+            pool.submit(Request(
+                rid=i, image=rng.normal(size=(s, s, 3)).astype(np.float32)))
+    else:
+        for i in range(B):
+            p = int(rng.integers(max(P // 2, 1), P + 1))
+            pool.submit(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab, size=(p,)),
+                max_new=G))
     t0 = time.time()
-    logits, cache = jax.jit(bundle.prefill)(params, tokens, cache, **extras)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    decode = jax.jit(bundle.decode)
-    out = []
-    t0 = time.time()
-    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for _ in range(G):
-        out.append(np.asarray(nxt)[:, 0])
-        logits, cache = decode(params, nxt, cache)
-        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-    print(f"[serve] prefill {P} toks: {t_prefill*1e3:.1f} ms; "
-          f"decode {G} steps: {t_decode*1e3:.1f} ms "
-          f"({t_decode/G*1e3:.2f} ms/tok)")
-    print("[serve] generated:", np.stack(out, 1).tolist())
+    comps = pool.run_until_idle()
+    dt = time.time() - t0
+    comps.sort(key=lambda c: c.rid)
+    if bundle.decode is None:
+        print(f"[serve] classified {len(comps)} images in {dt*1e3:.1f} ms "
+              f"({len(comps)/max(dt, 1e-9):.1f} img/s); dispatches "
+              f"{pool.dispatches}")
+        print("[serve] labels:", [c.label for c in comps])
+    else:
+        toks = pool.tokens_out
+        print(f"[serve] {len(comps)} requests, {toks} tokens in "
+              f"{dt*1e3:.1f} ms ({toks/max(dt, 1e-9):.1f} tok/s); "
+              f"dispatches {pool.dispatches}")
+        print("[serve] generated:", [c.tokens for c in comps])
 
 
 if __name__ == "__main__":

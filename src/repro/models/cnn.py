@@ -203,6 +203,13 @@ def accuracy(cfg: ArchConfig, params, batch):
         jnp.float32))
 
 
+def classify(cfg: ArchConfig, params, images, cache=None, **_):
+    """Serving entry point (the bundle's ``prefill``): one batched
+    forward, no cache — the serve tier's classify mode (a CNN "request"
+    is one image, completed in a single dispatch)."""
+    return forward(cfg, params, images), None
+
+
 def conv_leaf_keys(params) -> list[str]:
     from ..core.hsadmm import leaf_keys
     return [k for k in leaf_keys(params)
@@ -356,4 +363,5 @@ def build(cfg: ArchConfig) -> ModelBundle:
         param_specs=param_specs(cfg, shapes),
         plan=sparsity_plan(cfg, shapes),
         stack_map=(),   # no scan stacks: every conv leaf is its own "layer"
+        prefill=functools.partial(classify, cfg),
     )

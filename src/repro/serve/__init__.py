@@ -1,0 +1,27 @@
+"""repro.serve — the continuous-batching serving tier over pruned bundles.
+
+Layers (ISSUE 6 / ROADMAP "heavy traffic" item):
+
+  * :mod:`serve.buckets`   — the static shape grid (prompt / sequence /
+    batch buckets) every compiled executable comes from;
+  * :mod:`serve.engine`    — :class:`BucketEngine`, the AOT-compiled
+    per-bucket prefill/decode (or classify) executables with per-bucket,
+    shrunk-width lane-bank caches;
+  * :mod:`serve.scheduler` — :class:`ContinuousScheduler`, the
+    admission/decode/retire loop (one replica);
+  * :mod:`serve.replica`   — :class:`ReplicaPool`, N data-parallel
+    replicas off one checkpoint behind a least-loaded dispatcher.
+
+``launch.serve`` is the CLI over this package; ``benchmarks/serve_bench``
+is the load generator that writes ``BENCH_serve.json``.
+"""
+from .buckets import BucketSpec, bucket_for, pow2_grid, spec_for_workload
+from .engine import BucketEngine
+from .replica import ReplicaPool
+from .scheduler import Completion, ContinuousScheduler, Request
+
+__all__ = [
+    "BucketSpec", "bucket_for", "pow2_grid", "spec_for_workload",
+    "BucketEngine", "ContinuousScheduler", "Request", "Completion",
+    "ReplicaPool",
+]

@@ -1,0 +1,134 @@
+"""Bucketing policy for the serving tier (DESIGN.md §Serving).
+
+Every compiled shape in the serving tier comes off a small static grid so
+the steady state never recompiles:
+
+  * **prompt buckets** — prefill lengths.  A request with prompt length
+    ``p`` prefills its first ``p - 1`` tokens right-padded to the
+    smallest covering bucket; the LAST prompt token rides the first
+    decode step instead (so the prefill executable never needs a
+    position-indexed logits gather, and the first sampled token comes out
+    of the same decode path as every later one).  Exactness: causal
+    masking hides the pad *keys* from every real query during prefill,
+    and the per-lane cache ``len`` is set to the true ``p - 1`` so decode
+    masks the stale pad rows and overwrites them one by one.
+  * **sequence buckets** — KV/SSM-cache capacities.  A request whose
+    total context is ``p + g - 1`` rows (prefill writes ``p - 1``, the
+    ``g`` decode steps write one each) is assigned to the smallest
+    covering bucket's lane bank, so cache memory is paid per bucket —
+    NOT at one global ``P + G`` for every request.
+  * **batch buckets** — prefill admission group sizes.  ``n`` admitted
+    requests split greedily into the largest covering buckets; short
+    groups pad with dropped scatter rows.
+
+All grids are powers of two by default (:func:`pow2_grid`), which bounds
+the ahead-of-time executable count at
+``|batch| * |prompt<=seq| * |seq| + |seq|``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+def pow2_grid(lo: int, hi: int) -> tuple[int, ...]:
+    """Powers of two from >=lo up to the first one covering hi."""
+    out, b = [], max(1, lo)
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> Optional[int]:
+    """Smallest bucket >= n (buckets sorted ascending); None if none covers."""
+    for b in buckets:
+        if b >= n:
+            return b
+    return None
+
+
+def split_batch(n: int, batch_buckets: tuple[int, ...]) -> list[tuple]:
+    """Decompose ``n`` admitted requests into prefill dispatch groups.
+
+    Greedy largest-first; a remainder smaller than the smallest bucket
+    still dispatches at the smallest bucket with padded (dropped) rows.
+    Returns ``[(count, capacity), ...]`` with ``sum(count) == n``.
+    """
+    bs = sorted(batch_buckets, reverse=True)
+    out = []
+    while n > 0:
+        b = next((b for b in bs if b <= n), bs[-1])
+        take = min(n, b)
+        out.append((take, b))
+        n -= take
+    return out
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """The static shape grid of one :class:`serve.engine.BucketEngine`."""
+
+    prompt_buckets: tuple[int, ...] = (8, 16)
+    seq_buckets: tuple[int, ...] = (16, 32)
+    lanes: int = 4                       # decode lanes per sequence bucket
+    batch_buckets: tuple[int, ...] = (1, 2)
+
+    def __post_init__(self):
+        for name in ("prompt_buckets", "seq_buckets", "batch_buckets"):
+            v = getattr(self, name)
+            if not v or list(v) != sorted(set(v)) or min(v) < 1:
+                raise ValueError(f"{name} must be sorted unique positives, "
+                                 f"got {v!r}")
+        if self.lanes < 1:
+            raise ValueError("lanes must be >= 1")
+        if min(self.prompt_buckets) > max(self.seq_buckets):
+            raise ValueError("no prompt bucket fits inside any seq bucket")
+
+    @property
+    def max_context(self) -> int:
+        return max(self.seq_buckets)
+
+    def prefill_keys(self):
+        """Every (batch, prompt, seq) cell compiled ahead of time: a
+        prefill at bucket pb only ever targets a bank whose cache can
+        hold it (pb <= sb)."""
+        return [(nb, pb, sb)
+                for sb in self.seq_buckets
+                for pb in self.prompt_buckets if pb <= sb
+                for nb in self.batch_buckets]
+
+    def assign(self, prompt_len: int, max_new: int):
+        """(prompt_bucket, seq_bucket) for one request, or raise.
+
+        The prefill covers ``prompt_len - 1`` tokens and the cache needs
+        ``prompt_len + max_new - 1`` rows (see module docstring).
+        """
+        if prompt_len < 1 or max_new < 1:
+            raise ValueError("need prompt_len >= 1 and max_new >= 1")
+        sb = bucket_for(prompt_len + max_new - 1, self.seq_buckets)
+        if sb is None:
+            raise ValueError(
+                f"request context {prompt_len + max_new - 1} exceeds the "
+                f"largest sequence bucket {self.max_context}")
+        pb = bucket_for(max(prompt_len - 1, 1), self.prompt_buckets)
+        if pb is None or pb > sb:
+            pb = bucket_for(max(prompt_len - 1, 1),
+                            tuple(b for b in self.prompt_buckets if b <= sb))
+            if pb is None:
+                raise ValueError(
+                    f"prompt length {prompt_len} has no prompt bucket "
+                    f"inside sequence bucket {sb}")
+        return pb, sb
+
+
+def spec_for_workload(max_prompt: int, max_new: int, *, lanes: int = 4,
+                      batch_buckets: tuple[int, ...] = (1, 2),
+                      min_bucket: int = 8) -> BucketSpec:
+    """A power-of-two :class:`BucketSpec` covering prompts up to
+    ``max_prompt`` and generations up to ``max_new``."""
+    return BucketSpec(
+        prompt_buckets=pow2_grid(min_bucket, max(max_prompt - 1, 1)),
+        seq_buckets=pow2_grid(min_bucket, max_prompt + max_new - 1),
+        lanes=lanes, batch_buckets=batch_buckets)

@@ -1,0 +1,234 @@
+"""AOT bucket engine: every serving executable compiled ahead of time.
+
+:class:`BucketEngine` binds one :class:`models.api.ModelBundle` (dense or
+physically pruned) to a :class:`serve.buckets.BucketSpec` and compiles the
+whole executable grid up front with the same AOT machinery the training
+:class:`train.engine.Engine` uses for ``round_hlo`` — ``jit(...).lower(
+shape_structs).compile()`` — so the steady serving state performs ZERO
+compilations (guarded by ``dist.monitor.compile_count`` in CI).
+
+Two modes, chosen by the bundle:
+
+* **generate** (``bundle.decode`` is set): per-``(batch, prompt, seq)``
+  prefill executables and one decode executable per sequence bucket.
+  Caches live in per-sequence-bucket *lane banks*: ``lanes`` copies of
+  ``bundle.init_cache(1, S_bucket)`` stacked on a leading lane axis, so
+  every lane carries its OWN ``len`` — the piece of state that lets a
+  single decode dispatch advance requests at different positions
+  (continuous batching) without touching any model code.  The decode
+  executable vmaps the bundle's stock single-request decode over lanes;
+  the prefill executable vmaps prefill, overrides each lane's ``len``
+  with the true prompt length, and scatters the fresh caches into the
+  bank at the assigned lane indices (out-of-range pad rows drop).
+  Cache memory is paid per bucket: a 16-token request in a
+  ``seq_buckets=(16, 512)`` grid allocates 16 rows, not 512.
+* **classify** (no ``decode``, e.g. the CNN family): one forward
+  executable per batch bucket; requests complete in a single dispatch.
+
+Exactness contract (the padding/bucketing equivalence test in
+``tests/test_serve.py``): supported generative families mask attention by
+the cache ``len``, so right-padded prefill plus the ``len`` override
+computes bit-for-bit the same kept rows as an unpadded run.  Families
+with *recurrent* serving state (ssm/hybrid) are refused — pad tokens
+would enter the recurrent state and bucketing would silently change the
+math.
+
+On a RECONFIGURED / pruned bundle the caches come out at the shrunk
+widths automatically (``init_cache`` reads the bundle's own cfg), which
+is the serving half of the paper's Table 1 claim: less cache memory and
+fewer FLOPs per token.  :meth:`BucketEngine.cache_shapes` /
+:meth:`cache_bytes` expose that for assertions and benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import ModelBundle
+from .buckets import BucketSpec
+
+# serving-cache leaves that accumulate recurrent state: bucketed (padded)
+# prefill is NOT exact for these families (see module docstring)
+_RECURRENT_KEYS = ("ssm", "conv_x", "conv_B", "conv_C")
+
+
+class BucketEngine:
+    def __init__(self, bundle: ModelBundle, spec: Optional[BucketSpec] = None,
+                 *, params_like=None, compile_now: bool = True):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.spec = spec or BucketSpec()
+        self.mode = "generate" if bundle.decode is not None else "classify"
+        if self.mode == "generate":
+            c0 = self._lane_cache_struct(self.spec.seq_buckets[0])
+            bad = [k for k in _RECURRENT_KEYS if k in c0]
+            if bad:
+                raise NotImplementedError(
+                    f"family {self.cfg.family!r} keeps recurrent serving "
+                    f"state {bad}; bucketed (padded) prefill would fold pad "
+                    "tokens into it — the serving tier supports attention-"
+                    "cache families and the CNN classify path")
+            if "len" not in c0:
+                raise NotImplementedError(
+                    f"family {self.cfg.family!r} cache has no 'len' leaf; "
+                    "the per-lane position override needs one")
+        if params_like is None:
+            self._pstruct = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        else:
+            self._pstruct = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                               jnp.asarray(x).dtype),
+                params_like)
+        self._prefill = {}
+        self._decode = {}
+        self._classify = {}
+        if compile_now:
+            self.compile_all()
+
+    # ------------------------------------------------------------------ #
+    # cache shapes / memory
+    # ------------------------------------------------------------------ #
+
+    def _lane_cache_struct(self, S: int):
+        return jax.eval_shape(lambda: self.bundle.init_cache(1, S))
+
+    def bank_struct(self, sb: int):
+        L = self.spec.lanes
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype),
+            self._lane_cache_struct(sb))
+
+    def bank_zeros(self, sb: int):
+        """A fresh (all-idle) lane bank for sequence bucket ``sb``."""
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.bank_struct(sb))
+
+    def cache_shapes(self, sb: int) -> dict:
+        """Flat ``path -> shape`` of ONE lane's cache at bucket ``sb`` —
+        the satellite assertion surface: on a pruned bundle these shapes
+        carry the shrunk widths (kv heads, d_ff, channels)."""
+        out = {}
+
+        def rec(node, prefix):
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    rec(v, f"{prefix}/{k}" if prefix else k)
+            else:
+                out[prefix] = tuple(node.shape)
+        rec(self._lane_cache_struct(sb), "")
+        return out
+
+    def cache_bytes(self, sb: Optional[int] = None) -> int:
+        """Bank cache footprint: one bank (``sb``) or all banks summed."""
+        if self.mode == "classify":
+            return 0
+        sbs = [sb] if sb is not None else list(self.spec.seq_buckets)
+        total = 0
+        for s in sbs:
+            for leaf in jax.tree.leaves(self.bank_struct(s)):
+                total += leaf.size * leaf.dtype.itemsize
+        return total
+
+    # ------------------------------------------------------------------ #
+    # executable construction (AOT)
+    # ------------------------------------------------------------------ #
+
+    def _extras_zero(self, B: int) -> dict:
+        return {name: jnp.zeros((B,) + shp(None), dt)
+                for name, shp, dt in self.bundle.extra_inputs}
+
+    def _prefill_fn(self, S: int):
+        bundle = self.bundle
+
+        def one(params, toks, tlen):
+            cache = bundle.init_cache(1, S)
+            _, cache = bundle.prefill(params, toks[None], cache,
+                                      **self._extras_zero(1))
+            # true-length override: decode starts at tlen, masking (and
+            # then overwriting) the pad rows the bucketed prefill wrote
+            return dict(cache, len=jnp.asarray(tlen, jnp.int32))
+
+        def prefill(params, toks, tlens, lanes, bank):
+            new = jax.vmap(lambda t, l: one(params, t, l))(toks, tlens)
+            return jax.tree.map(
+                lambda b, n: b.at[lanes].set(n, mode="drop"), bank, new)
+        return prefill
+
+    def _decode_fn(self):
+        bundle = self.bundle
+
+        def one(params, tok, cache):
+            logits, cache = bundle.decode(params, tok[None, None], cache)
+            return jnp.argmax(logits[0], -1).astype(jnp.int32), cache
+
+        def decode(params, toks, bank):
+            nxt, bank = jax.vmap(
+                lambda t, c: one(params, t, c))(toks, bank)
+            return nxt, bank
+        return decode
+
+    def _classify_fn(self):
+        bundle = self.bundle
+
+        def classify(params, images):
+            logits, _ = bundle.prefill(params, images, None)
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return classify
+
+    def compile_all(self) -> int:
+        """Build the whole executable grid; returns the executable count.
+        After this, steady-state serving never compiles again."""
+        i32 = jnp.int32
+        if self.mode == "classify":
+            s = self.cfg.img_size
+            img = lambda nb: jax.ShapeDtypeStruct(  # noqa: E731
+                (nb, s, s, 3), jnp.float32)
+            for nb in self.spec.batch_buckets:
+                if nb in self._classify:
+                    continue
+                self._classify[nb] = jax.jit(self._classify_fn()).lower(
+                    self._pstruct, img(nb)).compile()
+            return self.num_executables
+
+        for sb in self.spec.seq_buckets:
+            if sb in self._decode:
+                continue
+            toks = jax.ShapeDtypeStruct((self.spec.lanes,), i32)
+            self._decode[sb] = jax.jit(
+                self._decode_fn(), donate_argnums=(2,)).lower(
+                self._pstruct, toks, self.bank_struct(sb)).compile()
+        for (nb, pb, sb) in self.spec.prefill_keys():
+            if (nb, pb, sb) in self._prefill:
+                continue
+            toks = jax.ShapeDtypeStruct((nb, pb), i32)
+            vec = jax.ShapeDtypeStruct((nb,), i32)
+            self._prefill[(nb, pb, sb)] = jax.jit(
+                self._prefill_fn(sb), donate_argnums=(4,)).lower(
+                self._pstruct, toks, vec, vec,
+                self.bank_struct(sb)).compile()
+        return self.num_executables
+
+    @property
+    def num_executables(self) -> int:
+        return len(self._prefill) + len(self._decode) + len(self._classify)
+
+    # ------------------------------------------------------------------ #
+    # dispatch surface (what the scheduler calls)
+    # ------------------------------------------------------------------ #
+
+    def prefill_exec(self, nb: int, pb: int, sb: int):
+        """(params, toks (nb,pb), true_lens (nb,), lanes (nb,), bank) ->
+        bank.  ``bank`` is donated."""
+        return self._prefill[(nb, pb, sb)]
+
+    def decode_exec(self, sb: int):
+        """(params, toks (lanes,), bank) -> (next_tokens (lanes,), bank).
+        One dispatch advances EVERY active lane of the bank by one token;
+        ``bank`` is donated."""
+        return self._decode[sb]
+
+    def classify_exec(self, nb: int):
+        """(params, images (nb,H,W,3)) -> labels (nb,)."""
+        return self._classify[nb]

@@ -1,0 +1,85 @@
+"""Multi-replica data-parallel serving off one checkpoint.
+
+N :class:`ContinuousScheduler` replicas share ONE :class:`BucketEngine`
+(the AOT executables are pure functions of shapes, so every replica
+dispatches the same compiled grid — no per-replica compilation) and, in
+the common case, one set of restored params (``launch.serve --ckpt``
+restores once and every replica serves the same arrays).  The dispatcher
+routes each incoming request to a replica:
+
+* ``least_loaded`` (default) — the replica with the fewest queued +
+  in-flight requests, ties broken by index;
+* ``round_robin`` — strict rotation.
+
+This is the in-process model of data-parallel serving: replicas are
+independent queues/lane banks over the same weights, which is exactly
+what N model servers behind a load balancer are.
+"""
+from __future__ import annotations
+
+import time
+
+from .engine import BucketEngine
+from .scheduler import Completion, ContinuousScheduler, Request
+
+_POLICIES = ("least_loaded", "round_robin")
+
+
+class ReplicaPool:
+    def __init__(self, engine: BucketEngine, params, *, replicas: int = 1,
+                 policy: str = "least_loaded", clock=time.perf_counter):
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {_POLICIES}")
+        self.engine = engine
+        self.policy = policy
+        self.replicas = [ContinuousScheduler(engine, params, clock=clock)
+                         for _ in range(replicas)]
+        self._rr = 0
+
+    def submit(self, req: Request) -> int:
+        """Route one request; returns the replica index it landed on."""
+        if self.policy == "round_robin":
+            i = self._rr % len(self.replicas)
+            self._rr += 1
+        else:
+            i = min(range(len(self.replicas)),
+                    key=lambda j: self.replicas[j].load)
+        self.replicas[i].submit(req)
+        return i
+
+    def step(self) -> list[Completion]:
+        out = []
+        for r in self.replicas:
+            if not r.idle:
+                out.extend(r.step())
+        return out
+
+    def run_until_idle(self, max_steps: int = 100_000) -> list[Completion]:
+        out = []
+        for _ in range(max_steps):
+            if self.idle:
+                return out
+            out.extend(self.step())
+        raise RuntimeError(f"pool not idle after {max_steps} steps")
+
+    @property
+    def idle(self) -> bool:
+        return all(r.idle for r in self.replicas)
+
+    @property
+    def load(self) -> int:
+        return sum(r.load for r in self.replicas)
+
+    @property
+    def dispatches(self) -> dict:
+        out: dict = {}
+        for r in self.replicas:
+            for k, v in r.dispatches.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    @property
+    def tokens_out(self) -> int:
+        return sum(r.tokens_out for r in self.replicas)

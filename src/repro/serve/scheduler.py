@@ -1,0 +1,256 @@
+"""Continuous-batching request scheduler over a :class:`BucketEngine`.
+
+One :class:`ContinuousScheduler` is one serving replica: a FIFO request
+queue plus one *lane bank* per sequence bucket.  Each ``step()``:
+
+  1. **admit** — walk the queue in order; a request enters as soon as its
+     sequence bucket's bank has a free lane (requests bound for a full
+     bank never block later requests bound for a different bank).
+     Admissions are grouped by (prompt bucket, sequence bucket), split
+     into batch buckets, and dispatched through the AOT prefill
+     executables — which also scatter the fresh caches into free lanes.
+  2. **decode** — one dispatch per bank with any active lane advances
+     every active lane by one token (idle lanes ride along as padding).
+     The first decode after admission feeds the request's LAST prompt
+     token (see ``serve.buckets``), so the first sampled token comes out
+     of the same executable as every later one.
+  3. **retire** — lanes that produced their ``max_new``-th token emit a
+     :class:`Completion` and free the lane for the next admission.
+
+The hot path is host-side numpy + AOT executable calls only — no traced
+jax ops — so after :meth:`BucketEngine.compile_all` the steady state
+performs zero XLA compilations (asserted with
+``dist.monitor.compile_count`` in tests and CI).
+
+Classify mode (CNN): the queue drains through the batch-bucketed forward
+executables each step; requests complete in one dispatch.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .buckets import split_batch
+from .engine import BucketEngine
+
+
+@dataclass
+class Request:
+    rid: object
+    prompt: Optional[np.ndarray] = None    # (p,) int tokens (generate)
+    max_new: int = 0
+    image: Optional[np.ndarray] = None     # (H,W,3) float (classify)
+    t_arrival: Optional[float] = None      # stamped at submit()
+
+
+@dataclass
+class Completion:
+    rid: object
+    tokens: list = field(default_factory=list)
+    label: Optional[int] = None
+    t_arrival: float = 0.0
+    t_admitted: float = 0.0
+    t_first: float = 0.0                   # first generated token
+    t_done: float = 0.0
+    seq_bucket: Optional[int] = None
+    lane: Optional[int] = None
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrival
+
+
+@dataclass
+class _Lane:
+    req: Request
+    remaining: int
+    next_tok: int
+    t_admitted: float
+    t_first: Optional[float] = None
+    tokens: list = field(default_factory=list)
+
+
+class _Bank:
+    def __init__(self, engine: BucketEngine, sb: int):
+        self.sb = sb
+        self.cache = engine.bank_zeros(sb)
+        self.lanes: list[Optional[_Lane]] = [None] * engine.spec.lanes
+        self.free = list(range(engine.spec.lanes))
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.lanes if s is not None)
+
+
+class ContinuousScheduler:
+    """One serving replica: queue + lane banks + dispatch counters."""
+
+    def __init__(self, engine: BucketEngine, params, *,
+                 clock=time.perf_counter):
+        self.engine = engine
+        self.params = params
+        self.clock = clock
+        self.queue: deque[Request] = deque()
+        self.banks: dict[int, _Bank] = {}
+        if engine.mode == "generate":
+            self.banks = {sb: _Bank(engine, sb)
+                          for sb in engine.spec.seq_buckets}
+        self.dispatches = {"prefill": 0, "decode": 0, "classify": 0}
+        self.tokens_out = 0
+        self.completed = 0
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def load(self) -> int:
+        """Queued + in-flight requests (the least-loaded routing metric)."""
+        return len(self.queue) + sum(b.active for b in self.banks.values())
+
+    @property
+    def idle(self) -> bool:
+        return self.load == 0
+
+    def submit(self, req: Request) -> None:
+        """Enqueue one request (validates its bucket assignment now, so a
+        request that can never be served fails loudly at submission)."""
+        if self.engine.mode == "generate":
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            if prompt.size < 1 or req.max_new < 1:
+                raise ValueError(f"request {req.rid!r}: need a non-empty "
+                                 "prompt and max_new >= 1")
+            req.prompt = prompt
+            self.engine.spec.assign(prompt.size, req.max_new)
+        elif req.image is None:
+            raise ValueError(f"request {req.rid!r}: classify mode "
+                             "needs an image")
+        req.t_arrival = self.clock() if req.t_arrival is None \
+            else req.t_arrival
+        self.queue.append(req)
+
+    def step(self) -> list[Completion]:
+        """One scheduler tick: admit, then advance every bank one token
+        (or drain the classify queue).  Returns finished requests."""
+        now = self.clock()
+        if self.engine.mode == "classify":
+            return self._classify_step(now)
+        self._admit(now)
+        return self._decode(now)
+
+    def run_until_idle(self, max_steps: int = 100_000) -> list[Completion]:
+        out = []
+        for _ in range(max_steps):
+            if self.idle:
+                return out
+            out.extend(self.step())
+        raise RuntimeError(f"scheduler not idle after {max_steps} steps "
+                           f"({self.load} requests still in flight)")
+
+    # ------------------------------------------------------------------ #
+    # generate mode
+    # ------------------------------------------------------------------ #
+
+    def _admit(self, now: float) -> None:
+        spec = self.engine.spec
+        admitted: dict[tuple, list] = {}
+        rest: deque[Request] = deque()
+        for req in self.queue:
+            pb, sb = spec.assign(req.prompt.size, req.max_new)
+            bank = self.banks[sb]
+            if bank.free:
+                lane = bank.free.pop(0)
+                admitted.setdefault((pb, sb), []).append((req, lane))
+            else:
+                rest.append(req)
+        self.queue = rest
+
+        for (pb, sb), items in admitted.items():
+            bank = self.banks[sb]
+            for cnt, cap in split_batch(len(items), spec.batch_buckets):
+                chunk, items = items[:cnt], items[cnt:]
+                toks = np.zeros((cap, pb), np.int32)
+                tlens = np.zeros((cap,), np.int32)
+                # pad rows target lane index == lanes: out of range, the
+                # executable's scatter drops them
+                lanes = np.full((cap,), spec.lanes, np.int32)
+                for i, (req, lane) in enumerate(chunk):
+                    p = req.prompt
+                    toks[i, : p.size - 1] = p[:-1]
+                    tlens[i] = p.size - 1
+                    lanes[i] = lane
+                bank.cache = self.engine.prefill_exec(cap, pb, sb)(
+                    self.params, toks, tlens, lanes, bank.cache)
+                self.dispatches["prefill"] += 1
+                for req, lane in chunk:
+                    bank.lanes[lane] = _Lane(
+                        req=req, remaining=req.max_new,
+                        next_tok=int(req.prompt[-1]), t_admitted=now)
+
+    def _decode(self, now: float) -> list[Completion]:
+        comps = []
+        for sb, bank in self.banks.items():
+            if bank.active == 0:
+                continue
+            toks = np.zeros((self.engine.spec.lanes,), np.int32)
+            for lane, st in enumerate(bank.lanes):
+                if st is not None:
+                    toks[lane] = st.next_tok
+            nxt, bank.cache = self.engine.decode_exec(sb)(
+                self.params, toks, bank.cache)
+            self.dispatches["decode"] += 1
+            nxt = np.asarray(nxt)
+            for lane, st in enumerate(bank.lanes):
+                if st is None:
+                    continue
+                tok = int(nxt[lane])
+                st.tokens.append(tok)
+                st.next_tok = tok
+                self.tokens_out += 1
+                if st.t_first is None:
+                    st.t_first = now
+                st.remaining -= 1
+                if st.remaining == 0:
+                    comps.append(Completion(
+                        rid=st.req.rid, tokens=st.tokens,
+                        t_arrival=st.req.t_arrival, t_admitted=st.t_admitted,
+                        t_first=st.t_first, t_done=now,
+                        seq_bucket=sb, lane=lane))
+                    self.completed += 1
+                    bank.lanes[lane] = None
+                    bank.free.append(lane)
+                    bank.free.sort()
+        return comps
+
+    # ------------------------------------------------------------------ #
+    # classify mode
+    # ------------------------------------------------------------------ #
+
+    def _classify_step(self, now: float) -> list[Completion]:
+        comps = []
+        items = list(self.queue)
+        self.queue.clear()
+        spec = self.engine.spec
+        s = self.engine.cfg.img_size
+        while items:
+            (cnt, cap), = split_batch(len(items), spec.batch_buckets)[:1]
+            chunk, items = items[:cnt], items[cnt:]
+            imgs = np.zeros((cap, s, s, 3), np.float32)
+            for i, req in enumerate(chunk):
+                imgs[i] = req.image
+            labels = np.asarray(self.engine.classify_exec(cap)(
+                self.params, imgs))
+            self.dispatches["classify"] += 1
+            for i, req in enumerate(chunk):
+                comps.append(Completion(
+                    rid=req.rid, label=int(labels[i]),
+                    t_arrival=req.t_arrival, t_admitted=now,
+                    t_first=now, t_done=now))
+                self.completed += 1
+        return comps

@@ -1,13 +1,31 @@
-"""launch.serve pruned-dense serving: project -> compact -> forward
-equivalence (paper §4.4 at serve time, Table 1 last column)."""
+"""The serving tier, bottom-up.
+
+* launch.serve pruned-dense helpers: project -> compact -> forward
+  equivalence (paper §4.4 at serve time, Table 1 last column);
+* serve.buckets policy units;
+* the continuous-batching scheduler against a FAKE engine (admission
+  order, lane reuse, retirement — no XLA in the loop);
+* the REAL BucketEngine: bucketed decode == unbucketed decode per
+  request, pruned == full-shape-masked decode (the test_reconfig
+  differential style), per-bucket/shrunk-width cache sizing, zero
+  steady-state recompiles, the classify path, ReplicaPool routing;
+* launch.serve --ckpt restore via bundle_from_checkpoint.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.sparsity import project
 from repro.launch.serve import prune_params_compact, pruned_serving_bundle
 from repro.models import build
+from repro.serve import (BucketEngine, BucketSpec, ContinuousScheduler,
+                         ReplicaPool, Request, bucket_for, pow2_grid,
+                         spec_for_workload)
+from repro.serve.buckets import split_batch
 
 
 def _smoke_bundle():
@@ -58,3 +76,350 @@ def test_pruned_roundtrip_forward_equivalence():
     np.testing.assert_allclose(np.asarray(logits_pruned),
                                np.asarray(logits_full),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# serve.buckets: the static shape grid
+# ---------------------------------------------------------------------- #
+
+
+def test_bucket_utilities():
+    assert pow2_grid(8, 40) == (8, 16, 32, 64)
+    assert pow2_grid(8, 8) == (8,)
+    assert bucket_for(5, (8, 16)) == 8
+    assert bucket_for(9, (8, 16)) == 16
+    assert bucket_for(17, (8, 16)) is None
+    assert split_batch(5, (1, 2)) == [(2, 2), (2, 2), (1, 1)]
+    # a remainder below the smallest bucket pads (dropped scatter rows)
+    assert split_batch(1, (2, 4)) == [(1, 2)]
+    assert sum(c for c, _ in split_batch(7, (1, 2, 4))) == 7
+
+
+def test_bucket_spec_assign_and_validation():
+    spec = BucketSpec(prompt_buckets=(4, 8), seq_buckets=(8, 16),
+                      lanes=2, batch_buckets=(1, 2))
+    # prefill covers p-1 tokens; the cache needs p+g-1 rows
+    assert spec.assign(5, 4) == (4, 8)      # 4 prefill rows, 8 cache rows
+    assert spec.assign(6, 4) == (8, 16)     # 5 prefill rows -> pb 8
+    assert spec.assign(1, 8) == (4, 8)      # empty prefill still buckets
+    with pytest.raises(ValueError):
+        spec.assign(10, 8)                  # context 17 > max bucket
+    with pytest.raises(ValueError):
+        BucketSpec(prompt_buckets=(8, 4))   # unsorted
+    with pytest.raises(ValueError):
+        BucketSpec(lanes=0)
+    # prefill grid only contains cells that fit their bank (pb <= sb)
+    assert all(pb <= sb for _, pb, sb in spec.prefill_keys())
+    ws = spec_for_workload(12, 8, lanes=3)
+    assert ws.lanes == 3
+    assert max(ws.seq_buckets) >= 12 + 8 - 1
+    assert max(ws.prompt_buckets) >= 11
+
+
+# ---------------------------------------------------------------------- #
+# scheduler against a fake engine (no XLA): queue semantics
+# ---------------------------------------------------------------------- #
+
+
+class _FakeEngine:
+    """Duck-typed BucketEngine: records dispatches, decode emits tok+1."""
+    mode = "generate"
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.prefills = []          # (nb, pb, sb, lanes-tuple)
+        self.decodes = 0
+
+    def bank_zeros(self, sb):
+        return {"len": np.zeros((self.spec.lanes,), np.int32)}
+
+    def prefill_exec(self, nb, pb, sb):
+        def run(params, toks, tlens, lanes, bank):
+            assert toks.shape == (nb, pb) and tlens.shape == (nb,)
+            self.prefills.append((nb, pb, sb, tuple(int(x) for x in lanes)))
+            return bank
+        return run
+
+    def decode_exec(self, sb):
+        def run(params, toks, bank):
+            self.decodes += 1
+            return np.asarray(toks, np.int32) + 1, bank
+        return run
+
+
+def _fake_sched(lanes=2, seq=(8, 16)):
+    spec = BucketSpec(prompt_buckets=(4,), seq_buckets=seq, lanes=lanes,
+                      batch_buckets=(1, 2))
+    eng = _FakeEngine(spec)
+    return eng, ContinuousScheduler(eng, params=None, clock=lambda: 0.0)
+
+
+def test_scheduler_admission_is_fifo_and_lane_reuse():
+    eng, sched = _fake_sched(lanes=2)
+    for i, g in enumerate([1, 3, 2, 1]):     # all target seq bucket 8
+        sched.submit(Request(rid=i, prompt=np.array([7, 7, 7]), max_new=g))
+    comps = sched.step()
+    # only r0, r1 fit the 2-lane bank; FIFO order, one grouped prefill —
+    # and r0 (max_new=1) already retired within the same step's decode
+    assert eng.prefills == [(2, 4, 8, (0, 1))]
+    assert [c.rid for c in comps] == [0]
+    assert {s.req.rid for s in sched.banks[8].lanes if s} == {1}
+    comps += sched.run_until_idle()
+    order = [c.rid for c in comps]
+    # r0 (1 tok) retires first and frees lane 0 for r2 BEFORE r3 (FIFO);
+    # every freed lane is reused
+    assert order.index(0) < order.index(2) < order.index(3)
+    assert eng.prefills[1][3] == (0,)        # r2 takes r0's freed lane
+    assert sorted(c.rid for c in comps) == [0, 1, 2, 3]
+    assert sched.idle and sched.banks[8].free == [0, 1]
+    # fake decode emits last_prompt_tok + 1, +1, ...: retirement kept
+    # exactly max_new tokens per request
+    assert [len(c.tokens) for c in sorted(comps, key=lambda c: c.rid)] \
+        == [1, 3, 2, 1]
+    assert comps[0].tokens[0] == 8           # last prompt token 7, +1
+
+
+def test_scheduler_full_bank_does_not_block_other_banks():
+    eng, sched = _fake_sched(lanes=1, seq=(8, 16))
+    sched.submit(Request(rid="a", prompt=np.array([1, 2]), max_new=4))
+    sched.submit(Request(rid="b", prompt=np.array([1, 2]), max_new=4))
+    sched.submit(Request(rid="c", prompt=np.array([1, 2]), max_new=12))
+    sched.step()
+    # "b" waits (bank 8 has one lane) but "c" — bound for bank 16 —
+    # admits immediately past it
+    assert [(p[2], p[3]) for p in eng.prefills] == [(8, (0,)), (16, (0,))]
+    assert sched.run_until_idle() != []
+
+
+def test_scheduler_submit_validates():
+    _, sched = _fake_sched()
+    with pytest.raises(ValueError):
+        sched.submit(Request(rid=0, prompt=np.array([1]), max_new=100))
+    with pytest.raises(ValueError):
+        sched.submit(Request(rid=0, prompt=np.array([], np.int32),
+                             max_new=1))
+
+
+def test_replica_pool_routing():
+    spec = BucketSpec(prompt_buckets=(4,), seq_buckets=(8,), lanes=2,
+                      batch_buckets=(1, 2))
+    rr = ReplicaPool(_FakeEngine(spec), None, replicas=3,
+                     policy="round_robin", clock=lambda: 0.0)
+    where = [rr.submit(Request(rid=i, prompt=np.array([1, 2]), max_new=2))
+             for i in range(5)]
+    assert where == [0, 1, 2, 0, 1]
+    ll = ReplicaPool(_FakeEngine(spec), None, replicas=2,
+                     policy="least_loaded", clock=lambda: 0.0)
+    assert ll.submit(Request(rid=0, prompt=np.array([1]), max_new=2)) == 0
+    assert ll.submit(Request(rid=1, prompt=np.array([1]), max_new=2)) == 1
+    assert ll.submit(Request(rid=2, prompt=np.array([1]), max_new=2)) == 0
+    assert sorted(c.rid for c in ll.run_until_idle()) == [0, 1, 2]
+    with pytest.raises(ValueError):
+        ReplicaPool(_FakeEngine(spec), None, policy="nope")
+
+
+# ---------------------------------------------------------------------- #
+# the real engine: exactness, cache sizing, zero recompiles
+# ---------------------------------------------------------------------- #
+
+_SPEC_SMALL = BucketSpec(prompt_buckets=(4,), seq_buckets=(8,), lanes=2,
+                         batch_buckets=(1, 2))
+
+
+@pytest.fixture(scope="module")
+def llm():
+    bundle = _smoke_bundle()
+    params = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params, BucketEngine(bundle, _SPEC_SMALL,
+                                        params_like=params)
+
+
+def _reference_greedy(bundle, params, prompt, gen):
+    """Unbucketed per-request greedy decode straight off the bundle."""
+    S = prompt.size + gen
+    cache = bundle.init_cache(1, S)
+    logits, cache = jax.jit(bundle.prefill)(params, prompt[None], cache)
+    nxt = int(jnp.argmax(logits[0], -1))
+    out, decode = [nxt], jax.jit(bundle.decode)
+    for _ in range(gen - 1):
+        logits, cache = decode(params,
+                               jnp.asarray([[out[-1]]], jnp.int32), cache)
+        out.append(int(jnp.argmax(logits[0], -1)))
+    return out
+
+
+def test_bucketed_decode_matches_unbucketed(llm):
+    """Padding/bucketing equivalence: every request's continuous-batched
+    greedy tokens equal its own unbucketed greedy run — right-padded
+    prefill + the per-lane ``len`` override are exact, not approximate."""
+    bundle, params, engine = llm
+    sched = ContinuousScheduler(engine, params)
+    rng = np.random.default_rng(0)
+    shapes = [(5, 3), (3, 4), (4, 2), (2, 4), (5, 4)]   # mixed (p, g)
+    prompts = {i: rng.integers(0, bundle.cfg.vocab, size=(p,))
+               for i, (p, _) in enumerate(shapes)}
+    for i, (p, g) in enumerate(shapes):
+        sched.submit(Request(rid=i, prompt=prompts[i], max_new=g))
+    got = {c.rid: c.tokens for c in sched.run_until_idle()}
+    assert sched.dispatches["prefill"] < len(shapes)    # grouped admission
+    for i, (p, g) in enumerate(shapes):
+        want = _reference_greedy(bundle, params,
+                                 jnp.asarray(prompts[i], jnp.int32), g)
+        assert got[i] == want, f"request {i} (p={p}, g={g})"
+
+
+def test_pruned_vs_full_shape_masked_decode(llm):
+    """Differential (the test_reconfig style): the physically-pruned
+    bundle serves the SAME tokens as the full-shape model running the
+    projected (masked) params — through the whole serving stack."""
+    bundle, params, engine = llm
+    pruned, compact, _ = pruned_serving_bundle(bundle, params)
+    proj, _ = project(params, bundle.plan)
+
+    eng_p = BucketEngine(pruned, _SPEC_SMALL, params_like=compact)
+    sp = ContinuousScheduler(eng_p, compact)
+    sf = ContinuousScheduler(engine, proj)    # same executables, masked params
+    rng = np.random.default_rng(1)
+    for i, (p, g) in enumerate([(5, 3), (3, 4), (2, 2)]):
+        prompt = rng.integers(0, bundle.cfg.vocab, size=(p,))
+        sp.submit(Request(rid=i, prompt=prompt, max_new=g))
+        sf.submit(Request(rid=i, prompt=prompt, max_new=g))
+    got_p = {c.rid: c.tokens for c in sp.run_until_idle()}
+    got_f = {c.rid: c.tokens for c in sf.run_until_idle()}
+    assert got_p == got_f
+
+
+def test_zero_steady_state_recompiles(llm):
+    """After compile_all, serving new requests (fresh lengths, lane
+    churn, grouped admissions) performs ZERO XLA compilations."""
+    from repro.dist.monitor import compile_count
+    bundle, params, engine = llm
+    sched = ContinuousScheduler(engine, params)
+    sched.submit(Request(rid="warm", prompt=np.array([1, 2, 3]), max_new=2))
+    sched.run_until_idle()
+    with compile_count() as st:
+        rng = np.random.default_rng(2)
+        for i in range(6):
+            p = int(rng.integers(2, 6))
+            sched.submit(Request(
+                rid=i, prompt=rng.integers(0, bundle.cfg.vocab, size=(p,)),
+                max_new=int(rng.integers(1, 5))))
+        comps = sched.run_until_idle()
+    assert len(comps) == 6
+    assert st.compiles == 0
+
+
+def test_per_bucket_cache_sizing_and_shrunk_widths():
+    """Satellite: caches are paid PER sequence bucket (not one global
+    P+G), and on a pruned bundle they come out at the shrunk widths."""
+    # widen kv heads so the GQA 'heads' rule actually prunes in smoke
+    cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+        n_kv_heads=4, n_heads=8)
+    bundle = build(cfg)
+    spec = BucketSpec(prompt_buckets=(4,), seq_buckets=(8, 32), lanes=2,
+                      batch_buckets=(1,))
+    dense = BucketEngine(bundle, spec, compile_now=False)
+    # per-bucket: the small bank holds 8 rows, the big one 32
+    assert dense.cache_shapes(8)["k"][2] == 8
+    assert dense.cache_shapes(32)["k"][2] == 32
+    assert dense.cache_bytes(8) < dense.cache_bytes(32)
+    assert dense.cache_bytes() == dense.cache_bytes(8) + dense.cache_bytes(32)
+
+    params = bundle.init(jax.random.PRNGKey(0))
+    pruned, compact, _ = pruned_serving_bundle(bundle, params)
+    heads = next(r for r in bundle.plan.rules if r.name == "heads")
+    assert pruned.cfg.n_kv_heads == heads.keep < cfg.n_kv_heads
+    shrunk = BucketEngine(pruned, spec, params_like=compact,
+                          compile_now=False)
+    # cache shape (layers, 1, S, n_kv, head_dim): the kv-head axis shrank
+    assert shrunk.cache_shapes(8)["k"][3] == heads.keep
+    assert shrunk.cache_shapes(8)["k"][3] < dense.cache_shapes(8)["k"][3]
+    assert shrunk.cache_bytes() < dense.cache_bytes()
+
+
+def test_engine_refuses_recurrent_cache_families():
+    """Bucketed (padded) prefill is NOT exact for recurrent serving
+    state — the engine must refuse, not silently change the math."""
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    with pytest.raises(NotImplementedError):
+        BucketEngine(build(cfg), _SPEC_SMALL, compile_now=False)
+
+
+# ---------------------------------------------------------------------- #
+# classify mode (CNN family)
+# ---------------------------------------------------------------------- #
+
+
+def test_classify_path_matches_direct_forward():
+    from repro.models.cnn import forward
+    cfg = get_config("resnet18", smoke=True)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    engine = BucketEngine(bundle, BucketSpec(batch_buckets=(1, 2)),
+                          params_like=params)
+    assert engine.mode == "classify" and engine.cache_bytes() == 0
+    pool = ReplicaPool(engine, params, replicas=2)
+    rng = np.random.default_rng(3)
+    imgs = rng.normal(size=(5, cfg.img_size, cfg.img_size, 3)) \
+        .astype(np.float32)
+    for i in range(5):
+        pool.submit(Request(rid=i, image=imgs[i]))
+    comps = pool.run_until_idle()
+    want = np.argmax(np.asarray(forward(cfg, params, jnp.asarray(imgs))), -1)
+    assert {c.rid: c.label for c in comps} \
+        == {i: int(want[i]) for i in range(5)}
+    assert pool.dispatches["classify"] >= 2      # split across replicas
+
+
+# ---------------------------------------------------------------------- #
+# launch.serve --ckpt: restore a training checkpoint into the tier
+# ---------------------------------------------------------------------- #
+
+
+def _train_engine(cfg, levels=(2,)):
+    from repro.configs.base import ConsensusSpec, ShapeConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.engine import Engine
+    shape = ShapeConfig("tiny", "train", 32, 8)
+    return Engine(build(cfg), make_host_mesh(), shape,
+                  consensus=ConsensusSpec(levels=levels,
+                                          compact_from_level=1)), shape
+
+
+def test_bundle_from_checkpoint_reconfigured(tmp_path):
+    """A checkpoint saved AFTER physical reconfiguration restores
+    straight into shrunk serving shapes (aux masks -> reconfigure ->
+    restore_elastic -> serving_bundle_from_state)."""
+    from repro.configs.base import HsadmmConfig
+    from repro.launch.serve import bundle_from_checkpoint
+    from repro.train.loop import RunConfig, train
+    cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+        hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=2,
+                            t_freeze=2, reconfig_patience=1))
+    eng, shape = _train_engine(cfg)
+    train(eng, RunConfig(outer_iters=5, shape=shape, eta=3e-3,
+                         reconfig=True, ckpt_dir=str(tmp_path),
+                         ckpt_every=5, log=None))
+    bundle, params, meta = bundle_from_checkpoint(str(tmp_path), cfg=cfg)
+    assert meta["reconfigured"]
+    ffn = next(r for r in build(cfg).plan.rules if r.name.startswith("ffn"))
+    assert bundle.cfg.d_ff == ffn.keep < cfg.d_ff
+    toks = jnp.zeros((1, 4), jnp.int32)
+    logits, _ = jax.jit(bundle.prefill)(params, toks,
+                                        bundle.init_cache(1, 8))
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_bundle_from_checkpoint_full_shape(tmp_path):
+    """A full-shape (pre-reconfiguration) checkpoint restores via the
+    frozen-mask compaction path and serves at the shrunk widths too."""
+    from repro.launch.serve import bundle_from_checkpoint
+    from repro.train.loop import RunConfig, train
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    eng, shape = _train_engine(cfg)
+    train(eng, RunConfig(outer_iters=2, shape=shape, eta=3e-3,
+                         ckpt_dir=str(tmp_path), ckpt_every=2, log=None))
+    bundle, params, meta = bundle_from_checkpoint(str(tmp_path), cfg=cfg)
+    assert not meta.get("reconfigured")
+    assert bundle.cfg.d_ff < cfg.d_ff
+    assert params["blocks"]["mlp"]["wg"].shape[-1] == bundle.cfg.d_ff

@@ -53,6 +53,163 @@ def kernel_rows(quick=False):
     return rows
 
 
+def wire_codec_rows(quick=False):
+    """Wire-transform microbenchmarks, two comparisons per codec op:
+
+    * the production ``kernels.ops`` route vs the interpret-mode Pallas
+      kernel (the ops.py backend-routing: off-TPU the shims dispatch to
+      the bit-identical jnp references so production executables never
+      trace through the Pallas interpreter — a conformance vehicle, not
+      a contract.  In-context the two compile to comparable code on CPU
+      (the round rows below are the decision evidence); standalone op
+      costs differ either way at these sizes, so read the ratio as
+      context, not as the routing's justification);
+    * the one-pass encode vs the stock two-pass (gather, then quantize)
+      composition it replaced."""
+    from repro.kernels import ops, wire
+    k = jax.random.PRNGKey(0)
+    R, C, B = (256, 2048, 1024) if not quick else (64, 512, 256)
+    x = jax.random.normal(k, (R, C))
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    inv = jnp.full((C,), B, jnp.int32).at[idx].set(
+        jnp.arange(B, dtype=jnp.int32))
+    rows = []
+
+    i_enc8 = jax.jit(lambda a, i: wire.gather_quantize(a, i, interpret=True))
+    us_o = _timed(lambda: ops.gather_quantize(x, idx))
+    us_i = _timed(lambda: i_enc8(x, idx))
+    us_s = _timed(lambda: ops.quantize_rows(ops.gather_rows(x, idx)))
+    rows.append((f"wire.q8_encode_{R}x{C}to{B}", us_o,
+                 f"interp_kernel={us_i:.0f}us stock_2pass={us_s:.0f}us "
+                 f"interp_ratio={us_i/us_o:.2f}x"))
+    q, s = ops.gather_quantize(x, idx)
+
+    def stock_q8_decode():
+        dec = ops.dequantize_rows(q, s)
+        return ops.gather_rows(jnp.pad(dec, ((0, 0), (0, 1))), inv)
+
+    i_dec8 = jax.jit(lambda a, b, i: wire.gather_dequantize(
+        jnp.pad(a, ((0, 0), (0, 1))), b, i, interpret=True))
+    us_o = _timed(lambda: ops.scatter_dequantize(q, s, idx, C))
+    us_i = _timed(lambda: i_dec8(q, s, inv))
+    us_s = _timed(stock_q8_decode)
+    rows.append((f"wire.q8_decode_{R}x{B}to{C}", us_o,
+                 f"interp_kernel={us_i:.0f}us stock_2pass={us_s:.0f}us "
+                 f"interp_ratio={us_i/us_o:.2f}x"))
+
+    i_enc4 = jax.jit(lambda a, i: wire.gather_quantize_q4(
+        a, i, interpret=True))
+    us_o = _timed(lambda: ops.gather_quantize_q4(x, idx))
+    us_i = _timed(lambda: i_enc4(x, idx))
+    us_s = _timed(lambda: ops.quantize_pack_q4(ops.gather_rows(x, idx)))
+    rows.append((f"wire.q4_encode_{R}x{C}to{B}", us_o,
+                 f"interp_kernel={us_i:.0f}us stock_2pass={us_s:.0f}us "
+                 f"interp_ratio={us_i/us_o:.2f}x"))
+    p, s4 = ops.gather_quantize_q4(x, idx)
+    inv4 = jnp.full((C,), 2 * p.shape[1], jnp.int32).at[idx].set(
+        jnp.arange(B, dtype=jnp.int32))
+    i_dec4 = jax.jit(lambda a, b, i: wire.unpack_gather_dequantize_q4(
+        jnp.pad(a, ((0, 0), (0, 1))), b, i, interpret=True))
+    us_o = _timed(lambda: ops.scatter_dequantize_q4(p, s4, idx, C))
+    us_i = _timed(lambda: i_dec4(p, s4, inv4))
+    rows.append((f"wire.q4_decode_{R}x{B}to{C}", us_o,
+                 f"interp_kernel={us_i:.0f}us "
+                 f"interp_ratio={us_i/us_o:.2f}x "
+                 f"packed payload={p.nbytes + s4.nbytes}B vs "
+                 f"f32 {R * B * 4}B"))
+    return rows
+
+
+def wire_round_rows(quick=False, reps=None):
+    """Acceptance comparison for the wire path, on the paper's own model
+    (resnet18; full size canonically, its smoke config under --quick):
+    per-round wall time AND analytic inter-node bytes of each quantized
+    top-boundary codec vs the q8 baseline, on the same engine
+    (compact_from_level beyond K, so any compaction comes from the codec
+    spec itself).  The codec only changes the CONSENSUS executable —
+    which dispatches once per outer round — so its compute is what gets
+    timed (the E local steps are identical executables across cells).
+
+    Methodology: timing rounds are interleaved across cells and each
+    cell's wall is the q8 median plus the median of PAIRED per-iteration
+    deltas — machine-load drift hits adjacent measurements equally, so
+    pairing cancels it (unpaired medians drift by more than the codec
+    deltas at smoke scale).  At full size the compact codecs win raw
+    measured compute outright — the ring, quantize, and decode all run
+    over keep-fraction payloads.  Because the single-host harness ships
+    inter-node payloads through memory, per-round wall is also reported
+    with an explicit fabric leg ``bytes / bandwidth`` at 1 GbE (the
+    commodity inter-node fabric the paper targets) and 10 GbE.  The
+    acceptance row picks the best measured compact cell, mirroring what
+    ``--wire-auto`` automates; the selector's map at default priors is
+    reported alongside."""
+    from repro.comm import AdaptiveWireSelector
+    from repro.configs import get_config
+    from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build
+    from repro.train.engine import Engine
+    from repro.train.loop import round_comm_bytes
+
+    reps = reps or (24 if quick else 10)
+    shape = ShapeConfig("bench", "train", 32, 8)
+    specs = ("q8", "compact+q8", "compact+q4")
+    cells = {}
+    for spec_name in specs:
+        cfg = get_config("resnet18", smoke=quick).replace(
+            hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=1,
+                                t_freeze=10_000, wire_inter=spec_name))
+        eng = Engine(build(cfg), make_host_mesh(), shape,
+                     consensus=ConsensusSpec(levels=(2, 2),
+                                             compact_from_level=2))
+        cfn = eng.consensus_step_fn(frozen=False)
+        st = eng.init_state_fn()(jax.random.PRNGKey(0))
+        st, _ = cfn(st)                  # compile; chain (input donated)
+        jax.block_until_ready(st)
+        _, dyn_b, _ = round_comm_bytes(eng)
+        cells[spec_name] = {"cfn": cfn, "st": st, "bytes": dyn_b,
+                            "ts": [], "eng": eng}
+    for _ in range(reps):
+        for spec_name in specs:          # interleaved for paired deltas
+            c = cells[spec_name]
+            t0 = time.time()
+            c["st"], _ = c["cfn"](c["st"])
+            jax.block_until_ready(c["st"])
+            c["ts"].append(time.time() - t0)
+    base = np.array(cells["q8"]["ts"])
+    us8 = float(np.median(base)) * 1e6
+    out, rows = {}, []
+    for spec_name in specs:
+        d = np.array(cells[spec_name]["ts"]) - base
+        us = us8 + float(np.median(d)) * 1e6
+        out[spec_name] = (us, cells[spec_name]["bytes"])
+        rows.append((f"round.wire_{spec_name}_us", us,
+                     f"consensus compute; internode_bytes/round="
+                     f"{cells[spec_name]['bytes']}"))
+    b8 = out["q8"][1]
+    for bw, tag in ((0.125e9, "1gbe"), (1.25e9, "10gbe")):
+        walls = {s: out[s][0] + out[s][1] / bw * 1e6 for s in specs}
+        winner = min(specs, key=lambda s: walls[s])
+        rows.append((f"round.wire_wall_{tag}_best_{winner}",
+                     walls[winner],
+                     "per-round wall = compute + bytes/fabric; " +
+                     " ".join(f"{s}={walls[s]:.0f}us" for s in specs)))
+        if tag == "1gbe":
+            sel = min(("compact+q8", "compact+q4"),
+                      key=lambda s: walls[s])
+            rows.append(("round.wire_accept_1gbe", walls[sel],
+                         f"{sel} vs q8: bytes_ratio="
+                         f"{out[sel][1] / b8:.3f} wall_ratio="
+                         f"{walls[sel] / walls['q8']:.3f} (<1 on both = "
+                         "acceptance; best measured compact cell, the "
+                         "selection --wire-auto automates)"))
+    sel = AdaptiveWireSelector(probe_reps=1).select(cells["q8"]["eng"])
+    rows.append(("round.wire_auto_map", 0.0,
+                 "selector map at default priors: "
+                 + ",".join(sel.spec_map)))
+    return rows
+
+
 def fused_round_rows(quick=False, reps=8):
     """Fused round executable vs legacy per-step dispatch, wall-time per
     outer round on the same engine/model (the acceptance metric for the
@@ -290,6 +447,8 @@ def main():
         rows.extend(reconfig_hlo_rows(quick, arch="resnet18",
                                       tag="resnet_"))
     rows.extend(kernel_rows(quick))
+    rows.extend(wire_codec_rows(quick))
+    rows.extend(wire_round_rows(quick))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

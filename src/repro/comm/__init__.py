@@ -3,19 +3,27 @@ path (CGX-style communication interface; see codec.py).
 
     from repro.comm import get_codec, compose, level_codecs
 
-    codec = get_codec("compact+q8")
+    codec = get_codec("compact+q4")
     reduced, st = codec.group_reduce(tree, g, weights)
     payload_b = codec.wire_bytes(leaf.shape, leaf.dtype)
+
+Measurement-driven per-boundary selection (select.py):
+
+    from repro.comm import AdaptiveWireSelector
+    sel = AdaptiveWireSelector().select(engine)   # -> WireSelection
+    engine = sel.apply(engine)                    # wire_map on the spec
 """
 from .codec import (INDEX_BYTES, CompactMarker, CompositeCodec, DenseCodec,
-                    Q8Codec, TopKCodec, WireCodec, collective_wire_bytes,
-                    compose, get_codec, group_sum, leaf_bytes,
-                    level_codecs, list_codecs, register_codec,
+                    Q4Codec, Q8Codec, TopKCodec, WireCodec,
+                    collective_wire_bytes, compose, get_codec, group_sum,
+                    leaf_bytes, level_codecs, list_codecs, register_codec,
                     resolve_specs)
+from .select import AdaptiveWireSelector, BoundaryScore, WireSelection
 
 __all__ = [
-    "INDEX_BYTES", "CompactMarker", "CompositeCodec", "DenseCodec",
-    "Q8Codec", "TopKCodec", "WireCodec", "collective_wire_bytes",
-    "compose", "get_codec", "group_sum", "leaf_bytes", "level_codecs",
-    "list_codecs", "register_codec", "resolve_specs",
+    "INDEX_BYTES", "AdaptiveWireSelector", "BoundaryScore", "CompactMarker",
+    "CompositeCodec", "DenseCodec", "Q4Codec", "Q8Codec", "TopKCodec",
+    "WireCodec", "WireSelection", "collective_wire_bytes", "compose",
+    "get_codec", "group_sum", "leaf_bytes", "level_codecs", "list_codecs",
+    "register_codec", "resolve_specs",
 ]

@@ -19,15 +19,27 @@ three things for one fabric boundary:
 Registered codecs (``get_codec`` specs):
 
   ``dense``        param-dtype payloads, plain weighted group-sum (paper)
-  ``q8``           per-leaf symmetric int8 quantization + f32 scale,
-                   exchanged via a ring of shifts, dequant-accumulated in
-                   f32 (beyond-paper §Perf; was ``comm_quant="int8"``)
+  ``q8``           symmetric int8 quantization with one f32 scale per
+                   row of the (R, C) 2-D leaf view, exchanged via a ring
+                   of shifts, dequant-accumulated in f32 (beyond-paper
+                   §Perf; was ``comm_quant="int8"``)
+  ``q4``           packed 4-bit symmetric quantization: two channels per
+                   byte + per-row f32 scales, packed/unpacked in-kernel
+                   (kernels/wire.py)
   ``topk:<rate>``  per-member magnitude top-``rate`` sparsification with
                    error feedback; values+int32-index payloads with
                    AllGather semantics (the DGC baseline, paper §5.1.4)
   ``compact``      structural-compaction *marker*: composes with an
                    element codec (``compact+q8``) to request the
                    H-SADMM physically-shrunk buffer at that boundary
+
+Quantizing codecs route encode/decode through the fused Pallas wire
+kernels (``kernels.ops`` dispatch shims over ``kernels/wire.py``): one
+streaming pass computes the per-row abs-max in VMEM and quantizes (and,
+for the compact path, gathers kept groups) on the way out; decode is
+the mirrored dequantize + zero-fill expansion.  Scale granularity is
+per ROW of the (R, C) view — a function of the leaf shape only, so
+``wire_bytes`` stays analytic (DESIGN.md "Per-row wire scales").
 
 ``compose`` stacks a marker with exactly one element codec, so the
 paper's structural shrinkage and a quantized wire format select together
@@ -58,6 +70,12 @@ def _leaf_elems(shape) -> int:
     for s in shape:
         n *= s
     return n
+
+
+def _leaf_rows(shape) -> int:
+    """Rows of the (R, C) 2-D wire view of one leaf — the number of
+    quantization scales it ships (0-D/1-D leaves are one row)."""
+    return _leaf_elems(shape[:-1]) if len(shape) >= 2 else 1
 
 
 def leaf_bytes(shape, dtype) -> int:
@@ -123,6 +141,28 @@ class WireCodec:
     def decode(self, payload, like: Optional[jnp.ndarray] = None):
         return payload
 
+    # ---- fused compact wire path (canonical (R, C) 2-D view) ------------ #
+    def encode_compact(self, leaf2d: jnp.ndarray, idx: jnp.ndarray):
+        """Kept-group gather along the minor axis + encode of a (R, C)
+        leaf — the §4.4 packing fused with this codec's element format.
+        Quantizing codecs override with a single-pass Pallas kernel; the
+        base gathers (one kernel pass) and encodes the result."""
+        from ..kernels import ops
+        return self.encode(ops.gather_rows(leaf2d, idx))
+
+    def decode_expand(self, payload, idx: jnp.ndarray, full: int,
+                      like: Optional[jnp.ndarray] = None):
+        """Inverse of :meth:`encode_compact`: decode + zero-fill the
+        dropped channels -> (R, full) (inverse-permutation gather into a
+        zero-padded buffer; scatter hardware is never needed)."""
+        from ..kernels import ops
+        dec = self.decode(payload, like=like)
+        B = idx.shape[0]
+        inv = jnp.full((full,), B, jnp.int32).at[idx].set(
+            jnp.arange(B, dtype=jnp.int32))
+        out = ops.gather_rows(jnp.pad(dec, ((0, 0), (0, 1))), inv)
+        return out.astype(like.dtype) if like is not None else out
+
     # ---- traced exchange ------------------------------------------------ #
     def init_state(self, tree):
         """Zero error-feedback state for one boundary payload tree
@@ -150,42 +190,58 @@ class DenseCodec(WireCodec):
     """Param-dtype payloads, plain weighted group-sum (the paper)."""
 
 
-class Q8Codec(WireCodec):
-    """Per-leaf symmetric int8 quantization (beyond-paper §Perf).
+def _member_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """(lead, *p) -> (lead, rows_p, C) view: the finest 2-D row view of
+    each member's payload, members never sharing a row (so per-row wire
+    scales never mix group members)."""
+    if x.ndim >= 2:
+        return x.reshape((x.shape[0], -1, x.shape[-1]))
+    return x.reshape((x.shape[0], 1, 1))
 
-    Each leaf is scaled per group-member to int8 (+ one f32 scale per
-    member), exchanged across the group via a ring of shifts over the
-    leading dim, and dequant-accumulated in f32 locally.  Slow-fabric
+
+class Q8Codec(WireCodec):
+    """Per-row symmetric int8 quantization (beyond-paper §Perf).
+
+    Each leaf is scaled per row of its (R, C) 2-D view to int8 (+ one
+    f32 scale per row), exchanged across the group via a ring of shifts
+    over the leading dim, and dequant-accumulated in f32 locally.
+    Encode/decode run through the fused Pallas wire kernels (abs-max in
+    VMEM + quantize in one pass; ``kernels.ops`` shims).  Slow-fabric
     bytes drop 2x vs bf16 / 4x vs f32 payloads; quantization error is
-    bounded by max|x|/127 per leaf and is absorbed by the ADMM duals
+    bounded by max|row|/127 per row — at most the old per-leaf
+    max|x|/127 bound — and is absorbed by the ADMM duals
     (tests/test_perf_levers.py)."""
 
     name = "q8"
+    levels = 127
 
     def encode(self, leaf):
-        red_axes = tuple(range(leaf.ndim))
-        scale = jnp.max(jnp.abs(leaf).astype(jnp.float32),
-                        keepdims=True) / 127.0 + 1e-30 \
-            if not red_axes else \
-            jnp.max(jnp.abs(leaf).astype(jnp.float32), axis=red_axes,
-                    keepdims=True) / 127.0 + 1e-30
-        q = jnp.clip(jnp.round(leaf.astype(jnp.float32) / scale),
-                     -127, 127).astype(jnp.int8)
-        return q, scale
+        from ..kernels import ops
+        return ops.quantize_rows(leaf, levels=self.levels)
 
     def decode(self, payload, like=None):
+        from ..kernels import ops
         q, scale = payload
-        out = q.astype(jnp.float32) * scale
+        out = ops.dequantize_rows(q, scale)
+        return out.astype(like.dtype) if like is not None else out
+
+    def encode_compact(self, leaf2d, idx):
+        from ..kernels import ops
+        return ops.gather_quantize(leaf2d, idx, levels=self.levels)
+
+    def decode_expand(self, payload, idx, full, like=None):
+        from ..kernels import ops
+        q, scale = payload
+        out = ops.scatter_dequantize(q, scale, idx, full)
         return out.astype(like.dtype) if like is not None else out
 
     def group_reduce(self, tree, g, w=None, state=None):
+        from ..kernels import ops
+
         def one(x):
             xw = x * _wbcast(w, x) if w is not None else x
-            red_axes = tuple(range(1, x.ndim))
-            scale = jnp.max(jnp.abs(xw).astype(jnp.float32), axis=red_axes,
-                            keepdims=True) / 127.0 + 1e-30
-            q = jnp.clip(jnp.round(xw.astype(jnp.float32) / scale),
-                         -127, 127).astype(jnp.int8)
+            v = _member_rows(xw)
+            q, scale = ops.quantize_rows(v, levels=self.levels)
             G = x.shape[0] // g
             acc = (q.astype(jnp.float32) * scale)
             qr, sr = q, scale
@@ -197,12 +253,98 @@ class Q8Codec(WireCodec):
                 sr = jnp.roll(sr, 1, axis=1).reshape(scale.shape)
                 acc = acc + qr.astype(jnp.float32) * sr
             # every member of a group now holds the group sum
-            out = acc.reshape((G, g) + x.shape[1:])[:, 0]
-            return out.astype(x.dtype)
+            out = acc.reshape((G, g) + acc.shape[1:])[:, 0]
+            return out.reshape((G,) + x.shape[1:]).astype(x.dtype)
         return jax.tree.map(one, tree), state
 
     def wire_bytes(self, leaf_shape, dtype) -> int:
-        return _leaf_elems(leaf_shape) * 1 + 4   # s8 payload + f32 scale
+        # s8 payload + one f32 scale per (R, C)-view row
+        return _leaf_elems(leaf_shape) * 1 + 4 * _leaf_rows(leaf_shape)
+
+
+class Q4Codec(WireCodec):
+    """Packed 4-bit symmetric quantization: two channels per byte.
+
+    Rows of the (R, C) leaf view quantize to [-7, 7] (two's-complement
+    nibbles, one f32 scale per row) and pack pairwise into uint8 —
+    quantize + pack fused in one Pallas pass, unpack + dequant (+
+    zero-fill expansion on the compact path) fused on decode.  The ring
+    exchange rolls the PACKED buffer, so the bytes that cross the fabric
+    are exactly ``wire_bytes`` = rows * (ceil(C/2) + 4).  Odd minor dims
+    carry one zero pad nibble (trimmed on decode via the dense
+    template)."""
+
+    name = "q4"
+    levels = 7
+
+    def encode(self, leaf):
+        from ..kernels import ops
+        return ops.quantize_pack_q4(leaf)
+
+    def decode(self, payload, like=None):
+        from ..kernels import ops
+        assert like is not None, \
+            "q4 decode needs the dense template (the packed minor dim " \
+            "is ambiguous by one pad nibble)"
+        p, scale = payload
+        n = like.shape[-1] if like.ndim else 1
+        out = ops.unpack_dequantize_q4(p, scale, n)
+        return out.reshape(like.shape).astype(like.dtype)
+
+    def encode_compact(self, leaf2d, idx):
+        from ..kernels import ops
+        return ops.gather_quantize_q4(leaf2d, idx)
+
+    def decode_expand(self, payload, idx, full, like=None):
+        from ..kernels import ops
+        p, scale = payload
+        out = ops.scatter_dequantize_q4(p, scale, idx, full)
+        return out.astype(like.dtype) if like is not None else out
+
+    def group_reduce(self, tree, g, w=None, state=None):
+        from ..kernels import ops
+
+        def one(x):
+            xw = x * _wbcast(w, x) if w is not None else x
+            v = _member_rows(xw)
+            C = v.shape[-1]
+            p, scale = ops.quantize_pack_q4(v)
+            G = x.shape[0] // g
+
+            # Accumulate in nibble PLANES: low/high nibbles sign-extend
+            # with two int8 arithmetic shifts (pure elementwise — fuses
+            # into the hop loop), and the even/odd column interleave (a
+            # materialized shuffle) runs ONCE on the accumulated planes
+            # instead of once per received buffer.  Element values and
+            # float accumulation order are identical to unpacking every
+            # hop, so the group sum is bit-exact either way.
+            def planes(pp, ss):
+                s8 = pp.astype(jnp.int8)
+                lo = ((s8 << 4) >> 4).astype(jnp.float32) * ss
+                hi = (s8 >> 4).astype(jnp.float32) * ss
+                return lo, hi
+
+            acc_lo, acc_hi = planes(p, scale)
+            pr, sr = p, scale
+            for _ in range(g - 1):
+                # the ring rolls the PACKED uint8 buffer + its scales
+                pr = pr.reshape((G, g) + p.shape[1:])
+                sr = sr.reshape((G, g) + scale.shape[1:])
+                pr = jnp.roll(pr, 1, axis=1).reshape(p.shape)
+                sr = jnp.roll(sr, 1, axis=1).reshape(scale.shape)
+                lo, hi = planes(pr, sr)
+                acc_lo = acc_lo + lo
+                acc_hi = acc_hi + hi
+            acc = jnp.stack([acc_lo, acc_hi], axis=-1)
+            acc = acc.reshape(acc_lo.shape[:-1] + (-1,))[..., :C]
+            out = acc.reshape((G, g) + acc.shape[1:])[:, 0]
+            return out.reshape((G,) + x.shape[1:]).astype(x.dtype)
+        return jax.tree.map(one, tree), state
+
+    def wire_bytes(self, leaf_shape, dtype) -> int:
+        C = leaf_shape[-1] if len(leaf_shape) else 1
+        rows = _leaf_rows(leaf_shape)
+        return rows * ((C + 1) // 2) + 4 * rows   # packed u8 + f32 scales
 
 
 class TopKCodec(WireCodec):
@@ -308,6 +450,12 @@ class CompositeCodec(WireCodec):
     def decode(self, payload, like=None):
         return self._elem.decode(payload, like)
 
+    def encode_compact(self, leaf2d, idx):
+        return self._elem.encode_compact(leaf2d, idx)
+
+    def decode_expand(self, payload, idx, full, like=None):
+        return self._elem.decode_expand(payload, idx, full, like)
+
     def init_state(self, tree):
         return self._elem.init_state(tree)
 
@@ -340,6 +488,7 @@ def register_codec(name: str, factory) -> None:
 
 register_codec("dense", lambda arg=None: DenseCodec())
 register_codec("q8", lambda arg=None: Q8Codec())
+register_codec("q4", lambda arg=None: Q4Codec())
 register_codec("topk", lambda arg=None: TopKCodec(float(arg or 0.01)))
 register_codec("compact", lambda arg=None: CompactMarker())
 
@@ -396,13 +545,26 @@ def level_codecs(hp, levels: tuple, compact_from_level: int
                  ) -> list[WireCodec]:
     """One codec per level boundary k=1..K.
 
-    The top boundary (slow fabric) takes the *inter* codec; lower
-    boundaries take the *intra* codec.  Exception (legacy-faithful): the
-    flat K==1 ablation with ``compact_from_level >= 1`` is an honest
-    dense AllReduce — its single boundary is the intra one, so
-    ``comm_quant``/``wire_inter`` never quantize it."""
-    intra_s, inter_s = resolve_specs(hp)
+    ``hp.wire_map`` (one spec string per boundary, e.g. from
+    :class:`repro.comm.select.AdaptiveWireSelector`) overrides
+    everything verbatim — including the flat-ablation exception below;
+    an explicit per-boundary map is an explicit choice.
+
+    Otherwise the top boundary (slow fabric) takes the *inter* codec;
+    lower boundaries take the *intra* codec.  Exception
+    (legacy-faithful): the flat K==1 ablation with
+    ``compact_from_level >= 1`` is an honest dense AllReduce — its
+    single boundary is the intra one, so ``comm_quant``/``wire_inter``
+    never quantize it."""
     K = len(levels)
+    wm = getattr(hp, "wire_map", None)
+    if wm:
+        if len(wm) != K:
+            raise ValueError(
+                f"wire_map has {len(wm)} entries but the hierarchy has "
+                f"{K} level boundaries: {wm!r} vs levels={levels!r}")
+        return [get_codec(s) for s in wm]
+    intra_s, inter_s = resolve_specs(hp)
     kc = compact_from_level
     return [get_codec(inter_s) if (k == K and (K > 1 or kc == 0))
             else get_codec(intra_s) for k in range(1, K + 1)]

@@ -1,0 +1,196 @@
+"""Measurement-driven per-boundary wire-codec selection (the CGX loop).
+
+CGX's remaining win after a pluggable compression layer is *adaptive*
+selection: choose the codec per layer/fabric from measured bandwidth
+instead of one global knob (PacTrain makes the same argument from the
+algorithm side).  :class:`AdaptiveWireSelector` closes that loop for the
+H-SADMM hierarchy: for every level boundary it scores each candidate
+codec as
+
+    score_seconds = fabric_bytes / bandwidth(level) + compute_seconds
+
+where
+
+  * ``fabric_bytes`` is the analytic prediction — the boundary's payload
+    leaves priced by ``WireCodec.wire_bytes`` (compact shapes when the
+    boundary ships the shrunk buffer under that candidate) through the
+    same ring model ``collective_wire_bytes`` that ``dist.hlo_cost``
+    applies to measured collectives, so predicted and measured bytes
+    share one formula;
+  * ``compute_seconds`` is a short measured probe: the candidate's
+    ``group_reduce`` jitted and timed through
+    ``dist.monitor.probe_seconds`` on a representative payload slab,
+    scaled to the boundary's true element count (this is what catches a
+    codec whose encode/decode compute eats its byte win — e.g. nibble
+    packing on a fast fabric).
+
+The result is a boundary→spec map (``WireSelection.spec_map``) that
+``HsadmmConfig.wire_map`` / ``spec.codecs`` consume directly; launchers
+expose it behind ``--wire-auto`` and serialize the chosen map into the
+run report.
+
+Candidates are stateless reduce-codecs by default: top-k (stateful,
+AllGather semantics) has per-round error-feedback state whose cost is
+not captured by a one-shot probe, so it must be opted in explicitly.
+Ties inside ``prefer_margin`` resolve to the higher-fidelity candidate
+(fewer quantization levels lose information the duals must absorb).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .codec import collective_wire_bytes, get_codec
+
+#: default candidate specs, highest fidelity first (the tie-break order)
+CANDIDATES = ("dense", "compact+dense", "q8", "compact+q8", "q4",
+              "compact+q4")
+
+
+@dataclass
+class BoundaryScore:
+    """One (boundary, candidate) cell of the selection table."""
+    boundary: int          # level boundary k (1..K, innermost first)
+    spec: str              # candidate codec spec
+    group: int             # group size g at this boundary
+    payload_bytes: int     # per-member payload (sum of wire_bytes)
+    fabric_bytes: float    # ring-model traffic per device per exchange
+    wire_s: float          # fabric_bytes / bandwidth(level)
+    compute_s: float       # measured group_reduce probe, scaled
+    total_s: float = 0.0
+
+    def __post_init__(self):
+        self.total_s = self.wire_s + self.compute_s
+
+
+@dataclass
+class WireSelection:
+    """Selector output: the boundary→codec map + full scoring table."""
+    spec_map: tuple                 # one spec string per boundary k=1..K
+    scores: list = field(default_factory=list)   # every BoundaryScore
+    by_class: dict = field(default_factory=dict)  # rule -> bytes @chosen
+
+    def apply(self, engine):
+        """A new Engine whose consensus routes through the chosen map."""
+        return engine.with_wire(wire_map=self.spec_map)
+
+    def chosen(self, k: int) -> BoundaryScore:
+        return next(s for s in self.scores
+                    if s.boundary == k and s.spec == self.spec_map[k - 1])
+
+    def summary(self) -> dict:
+        return {"wire_map": list(self.spec_map),
+                "boundaries": [
+                    {"k": s.boundary, "spec": s.spec,
+                     "payload_bytes": s.payload_bytes,
+                     "predicted_us": round(s.total_s * 1e6, 1)}
+                    for s in (self.chosen(k)
+                              for k in range(1, len(self.spec_map) + 1))],
+                "by_class": self.by_class}
+
+    def to_json(self) -> str:
+        return json.dumps(self.summary())
+
+
+def _boundary_payload_shapes(engine, k: int, candidate) -> dict:
+    """Payload leaf shapes (no lead dim) boundary ``k`` exchanges under
+    ``candidate``: compact shapes when structural compaction covers the
+    boundary or the candidate carries the compact marker."""
+    from ..core.shrinkage import plan_payload_shapes
+    from ..train.loop import _param_shapes
+    shapes = _param_shapes(engine)
+    compact = (k - 1) >= engine.spec.consensus.compact_from_level \
+        or candidate.compact
+    if compact:
+        return plan_payload_shapes(shapes, engine.bundle.plan,
+                                   engine.spec.budgets)
+    return shapes
+
+
+@dataclass
+class AdaptiveWireSelector:
+    """Score every candidate codec per boundary, emit the best map.
+
+    Bandwidth priors default to a TPU-pod-ish split (fast intra fabric,
+    ~10x slower top boundary); override them with measured numbers when
+    the deployment has them (``dist.hlo`` reports measured per-fabric
+    bytes; pairing those with wall times gives real GB/s)."""
+
+    candidates: tuple = CANDIDATES
+    intra_gbps: float = 100.0      # fast-fabric (intra-node) prior
+    inter_gbps: float = 10.0       # slow-fabric (top boundary) prior
+    probe_rows: int = 64           # probe slab: (g, probe_rows, probe_cols)
+    probe_cols: int = 256
+    probe_reps: int = 3
+    prefer_margin: float = 0.02    # fidelity tie-break window (relative)
+
+    def _probe(self, codec, g: int) -> tuple[float, int]:
+        """Measured seconds of one jitted ``group_reduce`` on the probe
+        slab, and the slab's element count."""
+        from ..dist import monitor
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (g, self.probe_rows, self.probe_cols))
+        w = jnp.ones((g,))
+        fn = jax.jit(lambda t: codec.group_reduce(t, g, w)[0])
+        s, _compiles = monitor.probe_seconds(fn, {"x": x},
+                                             reps=self.probe_reps)
+        return s, x.size
+
+    def select(self, engine) -> WireSelection:
+        spec = engine.spec
+        levels = spec.consensus.levels
+        K = len(levels)
+        dtype = engine.cfg.param_dtype
+        scores: list[BoundaryScore] = []
+        spec_map: list[str] = []
+        probe_cache: dict = {}
+        for k in range(1, K + 1):
+            g = levels[k - 1]
+            gbps = self.inter_gbps if k == K else self.intra_gbps
+            best: BoundaryScore | None = None
+            for cand_spec in self.candidates:
+                cand = get_codec(cand_spec)
+                shapes = _boundary_payload_shapes(engine, k, cand)
+                payload_b = sum(cand.wire_bytes(s, dtype)
+                                for s in shapes.values())
+                elems = sum(max(1, _elems(s)) for s in shapes.values())
+                kind = "all-gather" if cand.gather else "all-reduce"
+                fabric_b = collective_wire_bytes(kind, g, payload_b)
+                if (cand.name, g) not in probe_cache:
+                    probe_cache[(cand.name, g)] = self._probe(cand, g)
+                probe_s, probe_elems = probe_cache[(cand.name, g)]
+                compute_s = probe_s * elems / probe_elems
+                sc = BoundaryScore(
+                    boundary=k, spec=cand_spec, group=g,
+                    payload_bytes=payload_b, fabric_bytes=fabric_b,
+                    wire_s=fabric_b / (gbps * 1e9),
+                    compute_s=compute_s)
+                scores.append(sc)
+                # strict-improvement-beyond-margin keeps the earlier
+                # (higher-fidelity) candidate on near-ties
+                if best is None or sc.total_s < best.total_s * (
+                        1.0 - self.prefer_margin):
+                    best = sc
+            spec_map.append(best.spec)
+
+        # per-coupling-class byte decomposition at the TOP boundary's
+        # chosen codec (the report's "which rule pays what" view)
+        top = get_codec(spec_map[-1])
+        top_shapes = _boundary_payload_shapes(engine, K, top)
+        by_class = {}
+        for rule in engine.bundle.plan.rules:
+            by_class[rule.name] = sum(
+                top.wire_bytes(top_shapes[la.key], dtype)
+                for la in rule.all_leaves if la.key in top_shapes)
+        return WireSelection(spec_map=tuple(spec_map), scores=scores,
+                             by_class=by_class)
+
+
+def _elems(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n

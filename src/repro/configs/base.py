@@ -71,6 +71,11 @@ class HsadmmConfig:
     # boundary.  None = "dense" (the paper's param-dtype exchange).
     wire_intra: Optional[str] = None
     wire_inter: Optional[str] = None
+    # Explicit per-boundary codec map (one spec per level boundary
+    # k=1..K, innermost first) — overrides wire_intra/wire_inter
+    # verbatim when set.  Emitted by repro.comm.select
+    # AdaptiveWireSelector (--wire-auto) and honored by level_codecs.
+    wire_map: Optional[tuple] = None
     # Physical reconfiguration (Engine.reconfigure / RunConfig.reconfig):
     # consecutive frozen-mask rounds to wait before the one-time retrace
     # of the round executable onto the budget-B architecture.

@@ -60,6 +60,30 @@ def compile_count():
         stats.compiles = _totals["compiles"] - start
 
 
+def probe_seconds(fn, *args, reps: int = 3, warmup: int = 1
+                  ) -> tuple[float, int]:
+    """Median wall-seconds per call of ``fn(*args)`` after ``warmup``
+    compile calls, plus the number of XLA compiles observed during the
+    TIMED calls (a short measured probe — repro.comm.select uses this
+    for codec selection; nonzero steady-state compiles mean the probe
+    timed XLA, not the computation, and should be discarded)."""
+    import time
+    out = None
+    for _ in range(max(warmup, 1)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    _ensure_listener()
+    with compile_count() as stats:
+        ts = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], stats.compiles
+
+
 @dataclass
 class CallCounter:
     calls: int = 0

@@ -24,10 +24,12 @@ def gather_groups(x, idx, *, block_r=256, interpret=False):
     """x: (R, C) f32/bf16, idx: (B,) int32 -> (R, B)."""
     R, C = x.shape
     B = idx.shape[0]
+    # pad the grid rather than shrinking the block: a prime/odd R used to
+    # degrade to br=1 (R single-row programs); with pl.cdiv the final
+    # block reads garbage pad rows whose writes land outside the logical
+    # (R, B) shape and are discarded
     br = min(block_r, R)
-    while R % br:
-        br -= 1
-    grid = (R // br,)
+    grid = (pl.cdiv(R, br),)
     return pl.pallas_call(
         _kernel,
         out_shape=jax.ShapeDtypeStruct((R, B), x.dtype),

@@ -72,7 +72,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              frozen: bool = False, mask_mode: str = None,
              keep_rate: float = None, compact: bool = True,
              smoke: bool = False, comm_quant: str = None,
-             wire_intra: str = None, wire_inter: str = None) -> dict:
+             wire_intra: str = None, wire_inter: str = None,
+             wire_auto: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     model_sz, data_sz = axes["model"], axes["data"]
@@ -104,6 +105,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         cons = __import__("dataclasses").replace(
             eng.consensus, compact_from_level=len(eng.consensus.levels) + 1)
         eng = Engine(bundle, mesh, shape, consensus=cons)
+    if wire_auto:
+        from ..comm import AdaptiveWireSelector
+        sel = AdaptiveWireSelector().select(eng)
+        eng = sel.apply(eng)
+        rec["wire_map"] = list(sel.spec_map)
+        print("[wire-auto] " + sel.to_json())
     p0_shape = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
     import math
     rec["n_params"] = sum(math.prod(x.shape)
@@ -192,6 +199,10 @@ def main(argv=None):
                     help="intra-node wire codec spec (repro.comm)")
     ap.add_argument("--wire-inter", default=None,
                     help="top-boundary wire codec spec (repro.comm)")
+    ap.add_argument("--wire-auto", action="store_true",
+                    help="per-boundary codec map from "
+                         "repro.comm.AdaptiveWireSelector (overrides "
+                         "--wire-intra/--wire-inter)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--subprocess", action="store_true",
@@ -226,7 +237,8 @@ def main(argv=None):
                             cmd += [flag, str(val)]
                     for flag, on in [("--frozen", args.frozen),
                                      ("--dense", args.dense),
-                                     ("--smoke", args.smoke)]:
+                                     ("--smoke", args.smoke),
+                                     ("--wire-auto", args.wire_auto)]:
                         if on:
                             cmd.append(flag)
                     if args.tag:
@@ -247,7 +259,8 @@ def main(argv=None):
                                    smoke=args.smoke,
                                    comm_quant=args.quant,
                                    wire_intra=args.wire_intra,
-                                   wire_inter=args.wire_inter)
+                                   wire_inter=args.wire_inter,
+                                   wire_auto=args.wire_auto)
                     rec["wall_s"] = round(time.time() - t0, 1)
                     with open(path, "w") as f:
                         json.dump(rec, f, indent=1)

@@ -45,6 +45,13 @@ def main(argv=None):
     ap.add_argument("--wire-inter", default=None, metavar="CODEC",
                     help="wire codec of the top inter-node (slow fabric) "
                          "boundary; also applied to --baseline trainers")
+    ap.add_argument("--wire-auto", action="store_true",
+                    help="measurement-driven per-boundary codec selection "
+                         "(repro.comm.AdaptiveWireSelector): score every "
+                         "candidate per fabric level from predicted ring "
+                         "bytes + a measured encode probe, then train on "
+                         "the chosen boundary->codec map (overrides "
+                         "--wire-intra/--wire-inter)")
     ap.add_argument("--baseline", default=None, choices=["ddp", "topk"])
     ap.add_argument("--flat", action="store_true",
                     help="PruneX (AR) flat-consensus ablation")
@@ -114,6 +121,12 @@ def main(argv=None):
             cons = ConsensusSpec(levels=(W,), compact_from_level=1,
                                  granularity="flat")
         eng = Engine(bundle, mesh, shape, consensus=cons)
+        wire_map = None
+        if args.wire_auto:
+            from ..comm import AdaptiveWireSelector
+            sel = AdaptiveWireSelector().select(eng)
+            wire_map = sel.spec_map
+            print("[wire-auto] " + sel.to_json())
         policies = []
         if args.drop_worker:
             try:
@@ -140,7 +153,7 @@ def main(argv=None):
                         metrics_every=args.metrics_every,
                         reconfig=args.reconfig,
                         reconfig_patience=args.reconfig_patience,
-                        hlo_stats=args.hlo_stats)
+                        hlo_stats=args.hlo_stats, wire_map=wire_map)
         _, rep = train(eng, run)
         if rep.reconfigured_at is not None and rep.comm_bytes_internode:
             print(f"[train] physically reconfigured at outer iter "

@@ -109,15 +109,20 @@ class Engine:
         self.frozen_masks: Optional[dict] = None
 
     def with_wire(self, intra: Optional[str] = None,
-                  inter: Optional[str] = None) -> "Engine":
+                  inter: Optional[str] = None,
+                  wire_map=None) -> "Engine":
         """A new Engine whose consensus exchanges run through the given
         ``repro.comm`` codec specs (None keeps the config's choice) —
-        same bundle, mesh, hierarchy; fresh jit/sharding caches."""
+        same bundle, mesh, hierarchy; fresh jit/sharding caches.
+        ``wire_map`` (one spec per level boundary, e.g. a
+        ``WireSelection.spec_map``) overrides intra/inter verbatim."""
         import dataclasses
         hp = self.cfg.hsadmm
         hp = dataclasses.replace(
             hp, wire_intra=intra if intra is not None else hp.wire_intra,
-            wire_inter=inter if inter is not None else hp.wire_inter)
+            wire_inter=inter if inter is not None else hp.wire_inter,
+            wire_map=tuple(wire_map) if wire_map is not None
+            else hp.wire_map)
         bundle = dataclasses.replace(self.bundle,
                                      cfg=self.cfg.replace(hsadmm=hp))
         return Engine(bundle, self.mesh, self.shape,

@@ -106,6 +106,9 @@ class RunConfig:
     # this run (the loop rebuilds the engine spec around them).
     wire_intra: Optional[str] = None
     wire_inter: Optional[str] = None
+    # explicit per-boundary codec map (one spec per level boundary;
+    # e.g. an AdaptiveWireSelector spec_map) — overrides intra/inter
+    wire_map: Optional[tuple] = None
     # physical reconfiguration: once masks have been frozen for
     # `reconfig_patience` rounds (None = HsadmmConfig.reconfig_patience),
     # migrate the whole state onto budget-B shapes and retrace the frozen
@@ -133,6 +136,10 @@ class TrainReport:
     # run never physically reconfigured)
     reconfigured_at: Optional[int] = None
     outer_iters: int = 0
+    # codec spec per level boundary the run's consensus actually routed
+    # through (innermost first; None for solo engines) — reflects
+    # wire_map / --wire-auto selection as well as intra/inter knobs
+    wire_map: Optional[list] = None
     # measured collective schedule per executable (dist.hlo), keyed
     # "dynamic"/"frozen" (+"reconfigured" after a retrace); None unless
     # RunConfig.hlo_stats
@@ -255,8 +262,9 @@ def train(engine: Engine, run: Optional[RunConfig] = None, *,
 
 
 def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
-    if run.wire_intra or run.wire_inter:
-        engine = engine.with_wire(run.wire_intra, run.wire_inter)
+    if run.wire_intra or run.wire_inter or run.wire_map:
+        engine = engine.with_wire(run.wire_intra, run.wire_inter,
+                                  run.wire_map)
     cfg = engine.cfg
     hp = cfg.hsadmm
     log = run.log
@@ -319,6 +327,8 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
     if rc_engine is not None:
         _, _, frz_b = round_comm_bytes(rc_engine)
     report = TrainReport()
+    report.wire_map = None if engine.spec.solo \
+        else [c.name for c in engine.spec.codecs]
     if run.hlo_stats:
         if rc_engine is not None:
             # reconfigured resume: the full-shape executables never

@@ -21,7 +21,7 @@ from repro.core import (EngineSpec, init_state, local_step, consensus_step,
                         round_step, get_leaf, leaf_keys)
 from repro.core.sparsity import GroupRule, LeafAxis, SparsityPlan
 
-MATRIX = ["dense", "q8", "compact+q8", "topk:0.01"]
+MATRIX = ["dense", "q8", "compact+q8", "topk:0.01", "q4", "compact+q4"]
 _env = os.environ.get("WIRE_CODEC")
 CODECS = [_env] if _env else MATRIX
 
@@ -32,15 +32,18 @@ CODECS = [_env] if _env else MATRIX
 
 
 def test_registry_and_spec_parsing():
-    assert {"dense", "q8", "topk", "compact"} <= set(list_codecs())
+    assert {"dense", "q8", "q4", "topk", "compact"} <= set(list_codecs())
     assert get_codec("dense").name == "dense"
-    assert get_codec("q8").wire_bytes((4, 4), "float32") == 16 + 4
+    # q8: 1 byte/elem + one f32 scale per ROW of the (R, C) leaf view
+    assert get_codec("q8").wire_bytes((4, 4), "float32") == 16 + 4 * 4
     tk = get_codec("topk:0.25")
     assert isinstance(tk, TopKCodec) and tk.rate == 0.25
     cq = get_codec("compact+q8")
     assert isinstance(cq, CompositeCodec)
     assert cq.compact and cq.name == "compact+q8"
-    assert cq.wire_bytes((4, 4), "float32") == 16 + 4   # delegates to q8
+    assert cq.wire_bytes((4, 4), "float32") == 16 + 16  # delegates to q8
+    c4 = get_codec("compact+q4")
+    assert c4.compact and c4.name == "compact+q4"
     assert compose("compact", "dense").compact
     with pytest.raises(KeyError):
         get_codec("zstd")
@@ -53,8 +56,14 @@ def test_wire_bytes_formulas():
     assert d.wire_bytes((8, 4), "float32") == 128
     assert d.wire_bytes((8, 4), "bfloat16") == 64
     q = get_codec("q8")
-    assert q.wire_bytes((8, 4), "float32") == 32 + 4    # s8 + f32 scale
-    assert q.wire_bytes((8, 4), "bfloat16") == 32 + 4   # dtype-independent
+    assert q.wire_bytes((8, 4), "float32") == 32 + 32   # s8 + f32 row scales
+    assert q.wire_bytes((8, 4), "bfloat16") == 32 + 32  # dtype-independent
+    q4 = get_codec("q4")
+    # two channels per byte (odd minor dims round up) + f32 row scales
+    assert q4.wire_bytes((4, 4), "float32") == 4 * 2 + 4 * 4
+    assert q4.wire_bytes((8, 4), "float32") == 8 * 2 + 8 * 4
+    assert q4.wire_bytes((8, 5), "float32") == 8 * 3 + 8 * 4  # pad nibble
+    assert q4.wire_bytes((100,), "float32") == 50 + 4         # one row
     t = get_codec("topk:0.1")
     # k = max(1, int(n * rate)); index is int32, value width = wire dtype
     assert t.wire_bytes((100,), "float32") == 10 * (4 + 4)
@@ -156,6 +165,20 @@ def test_level_codec_selection_and_legacy_shim():
                      *hier) == ["dense", "dense"]
     with pytest.raises(ValueError):
         names(HsadmmConfig(comm_quant="fp4"), *hier)
+
+
+def test_wire_map_overrides_intra_inter():
+    """An explicit per-boundary map (the AdaptiveWireSelector output /
+    --wire-auto) wins over wire_intra/wire_inter verbatim — including on
+    the flat-AR boundary the intra/inter knobs honestly leave dense."""
+    names = lambda hp, lv, kc: [c.name for c in level_codecs(hp, lv, kc)]
+    hp = HsadmmConfig(wire_intra="q8", wire_inter="compact+q8",
+                      wire_map=("q4", "compact+q4"))
+    assert names(hp, (2, 2), 1) == ["q4", "compact+q4"]
+    # flat AR: the map is an explicit per-boundary choice, so it applies
+    assert names(HsadmmConfig(wire_map=("q8",)), (4,), 1) == ["q8"]
+    with pytest.raises(ValueError):   # one spec per boundary, exactly
+        names(HsadmmConfig(wire_map=("q8",)), (2, 2), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -375,7 +398,7 @@ print(json.dumps([[c.kind, c.payload_bytes, c.group_size] for c in colls]))
 
 
 @pytest.mark.parametrize("codec", [c for c in CODECS
-                                   if c in ("dense", "q8")])
+                                   if c in ("dense", "q8", "q4")])
 def test_measured_hlo_payloads_match_wire_bytes(codec):
     """The codec-format payloads XLA actually schedules equal
     ``WireCodec.wire_bytes`` of the compact buffer exactly; GSPMD may add
@@ -394,10 +417,17 @@ def test_measured_hlo_payloads_match_wire_bytes(codec):
     if codec == "dense":
         expected = get_codec("dense").wire_bytes((16, 8), "float32")
         assert expected in payloads          # the compact all-reduce
-    else:
-        # q8 ring: g-1 shifts, each moving the s8 buffer + its f32 scale;
-        # s8 elems + 4-byte scale == wire_bytes exactly
-        s8 = 16 * 8
-        assert get_codec("q8").wire_bytes((16, 8), "float32") == s8 + 4
+    elif codec == "q8":
+        # q8 ring: g-1 shifts, each moving the s8 buffer + its f32
+        # per-row scales; s8 elems + scale bytes == wire_bytes exactly
+        s8, sc = 16 * 8, 16 * 4
+        assert get_codec("q8").wire_bytes((16, 8), "float32") == s8 + sc
         assert payloads.count(s8) >= 3       # g-1 = 3 ring shifts
-        assert 4 in payloads                 # the f32 scale rides along
+        assert sc in payloads                # the f32 scales ride along
+    else:
+        # q4 ring rolls the PACKED uint8 buffer (16, 4) — 64 bytes —
+        # plus the f32 row scales (16, 1) — also 64 bytes: 2 tensors
+        # x (g-1) shifts, every one exactly 64B on the wire
+        pk, sc = 16 * 4, 16 * 4
+        assert get_codec("q4").wire_bytes((16, 8), "float32") == pk + sc
+        assert payloads.count(64) >= 6

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, wire
+from repro.kernels.compact import gather_groups
 from repro.models.ssm import ssd_scan
 
 
@@ -113,3 +114,151 @@ def test_ssd_chunk_scan(T, chunk, H, P, N):
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# wire-path kernels (kernels/wire.py) vs ref.py oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("R,block_r", [(7, 4), (13, 8), (257, 256), (5, 256)])
+def test_gather_groups_prime_rows(R, block_r):
+    """Regression for the block-size degradation: a prime/odd R used to
+    shrink the row block down to br=1 (R single-row grid programs); the
+    padded pl.cdiv grid must stay exact on the non-dividing final block."""
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (R, 13))
+    idx = jnp.sort(jax.random.permutation(k, 13)[:5]).astype(jnp.int32)
+    out = gather_groups(x, idx, block_r=block_r, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x[:, idx]))
+
+
+@pytest.mark.parametrize("R,C", [(7, 13), (4, 128), (257, 6), (1, 1)])
+def test_quantize_rows_vs_ref(R, C):
+    x = jax.random.normal(jax.random.PRNGKey(1), (R, C)) * 3.0
+    q, s = wire.quantize_rows(x, block_r=8, interpret=True)
+    qr, sr = ref.quantize_rows_ref(x)
+    assert q.dtype == jnp.int8 and s.shape == (R, 1)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("R,C,B", [(7, 23, 11), (4, 64, 64), (9, 16, 1)])
+def test_gather_quantize_vs_ref(R, C, B):
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (R, C))
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    q, s = wire.gather_quantize(x, idx, block_r=4, interpret=True)
+    qr, sr = ref.gather_quantize_ref(x, idx)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("R,C,B", [(7, 23, 11), (3, 8, 8)])
+def test_gather_dequantize_vs_ref(R, C, B):
+    """Fused decode: dequantize + inverse-permutation zero-fill gather
+    equals the two-pass reference."""
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (R, C))
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    q, s = ref.gather_quantize_ref(x, idx)
+    inv = jnp.full((C,), B, jnp.int32).at[idx].set(
+        jnp.arange(B, dtype=jnp.int32))
+    qp = jnp.pad(q, ((0, 0), (0, 1)))
+    out = wire.gather_dequantize(qp, s, inv, block_r=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.gather_dequantize_ref(qp, s,
+                                                                    inv)),
+                               rtol=1e-6)
+    # dropped channels are exactly zero; kept ones match within quant err
+    mask = np.zeros(C); mask[np.asarray(idx)] = 1
+    assert np.all(np.asarray(out)[:, mask == 0] == 0.0)
+
+
+@pytest.mark.parametrize("R,C", [(7, 13), (4, 16), (5, 1), (257, 7)])
+def test_quantize_pack_q4_vs_ref(R, C):
+    """Odd minor dims exercise the zero pad nibble."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (R, C))
+    p, s = wire.quantize_pack_q4(x, block_r=8, interpret=True)
+    prr, srr = ref.quantize_pack_q4_ref(x)
+    assert p.dtype == jnp.uint8 and p.shape == (R, (C + 1) // 2)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(prr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(srr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("R,C,B", [(7, 23, 11), (4, 16, 3)])
+def test_gather_quantize_q4_vs_ref(R, C, B):
+    k = jax.random.PRNGKey(5)
+    x = jax.random.normal(k, (R, C))
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    p, s = wire.gather_quantize_q4(x, idx, block_r=4, interpret=True)
+    prr, srr = ref.quantize_pack_q4_ref(x[:, idx])
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(prr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(srr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("R,C,B", [(7, 23, 11), (3, 8, 5)])
+def test_unpack_gather_dequantize_q4_vs_ref(R, C, B):
+    """Fused q4 decode (unpack + dequantize + zero-fill) == unpack_q4_ref
+    composed with the dequantize reference."""
+    k = jax.random.PRNGKey(6)
+    x = jax.random.normal(k, (R, C))
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    p, s = ref.quantize_pack_q4_ref(x[:, idx])
+    Cp = p.shape[1]
+    # dropped channels read nibble 2*Cp of the zero-padded packed buffer
+    inv = jnp.full((C,), 2 * Cp, jnp.int32).at[idx].set(
+        jnp.arange(B, dtype=jnp.int32))
+    pp = jnp.pad(p, ((0, 0), (0, 1)))
+    out = wire.unpack_gather_dequantize_q4(pp, s, inv, block_r=4,
+                                           interpret=True)
+    q_un = ref.unpack_q4_ref(pp, 2 * (Cp + 1))
+    want = np.asarray(q_un)[:, np.asarray(inv)] * np.asarray(s)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+    mask = np.zeros(C); mask[np.asarray(idx)] = 1
+    assert np.all(np.asarray(out)[:, mask == 0] == 0.0)
+
+
+@pytest.mark.parametrize("shape", [(2, 3, 17), (9,), ()])
+def test_wire_ops_rank_edges(shape):
+    """The any-rank ops shims: 1-D leaves pad to one (1, N) row and 0-D
+    scalars to (1, 1) instead of crashing the 2-D reshape; decode∘encode
+    stays within the per-row quantization bound."""
+    x = jax.random.normal(jax.random.PRNGKey(7), shape) * 2.0
+    q, s = ops.quantize_rows(x)
+    assert q.shape == shape
+    y = ops.dequantize_rows(q, s)
+    assert y.shape == shape
+    bound = (np.abs(np.asarray(x)).max() if x.size else 0.0) / 127 + 1e-6
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=bound)
+    p, s4 = ops.quantize_pack_q4(x)
+    n = shape[-1] if shape else 1
+    assert p.shape == (shape[:-1] if shape else ()) + ((n + 1) // 2,)
+    y4 = ops.unpack_dequantize_q4(p, s4, n)
+    # shim output is (..., n); codecs reshape 0-D via the dense template
+    assert y4.shape == (shape if shape else (1,))
+    bound4 = (np.abs(np.asarray(x)).max() if x.size else 0.0) / 7 + 1e-6
+    np.testing.assert_allclose(np.asarray(y4).reshape(shape),
+                               np.asarray(x), atol=bound4)
+
+
+@pytest.mark.parametrize("codec_bits", [8, 4])
+def test_scatter_dequantize_zero_fill(codec_bits):
+    """compact wire roundtrip through the ops shims: kept channels match
+    within quantization error, dropped channels come back exactly zero."""
+    k = jax.random.PRNGKey(8)
+    C, B = 23, 11
+    x = jax.random.normal(k, (7, C))
+    idx = jnp.sort(jax.random.permutation(k, C)[:B]).astype(jnp.int32)
+    if codec_bits == 8:
+        q, s = ops.gather_quantize(x, idx)
+        out = ops.scatter_dequantize(q, s, idx, C)
+        bound = float(np.abs(np.asarray(x[:, idx])).max()) / 127 + 1e-6
+    else:
+        p, s = ops.gather_quantize_q4(x, idx)
+        out = ops.scatter_dequantize_q4(p, s, idx, C)
+        bound = float(np.abs(np.asarray(x[:, idx])).max()) / 7 + 1e-6
+    mask = np.zeros(C); mask[np.asarray(idx)] = 1
+    np.testing.assert_allclose(np.asarray(out)[:, mask == 1],
+                               np.asarray(x[:, idx]), atol=bound)
+    assert np.all(np.asarray(out)[:, mask == 0] == 0.0)

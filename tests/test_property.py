@@ -141,3 +141,59 @@ def test_score_consensus_masks_identical_across_nodes(seed):
                                   MaskSyncConfig("score_consensus"))
     assert mask.shape == (32,)          # one global mask, no node dim
     assert float(mask.sum()) == 16
+
+
+@given(R=st.integers(1, 9), C=st.integers(1, 33), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_q4_pack_unpack_roundtrip_bit_exact(R, C, seed):
+    """Nibble packing is lossless: unpack(pack(q)) == q for every 4-bit
+    value, any (odd or even) minor dim."""
+    from repro.kernels import ref
+    q = jax.random.randint(jax.random.PRNGKey(seed), (R, C), -7, 8)
+    p = ref.pack_q4_ref(q)
+    assert p.shape == (R, (C + 1) // 2) and p.dtype == jnp.uint8
+    back = ref.unpack_q4_ref(p, C)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@given(R=st.integers(1, 7), C=st.integers(1, 40),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_fused_q8_encode_matches_stock(R, C, scale, seed):
+    """The one-pass Pallas encode produces bit-identical int8 payloads
+    and scales to the stock two-pass reference at any magnitude."""
+    from repro.kernels import ops, ref
+    x = jax.random.normal(jax.random.PRNGKey(seed), (R, C)) * scale
+    q, s = ops.quantize_rows(x)
+    qr, sr = ref.quantize_rows_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr.reshape(R, 1)),
+                               rtol=1e-7)
+
+
+@given(C=st.integers(4, 32), seed=st.integers(0, 2**16),
+       bits=st.sampled_from([8, 4]))
+@settings(**SETTINGS)
+def test_fused_decode_encode_idempotent_on_kept(C, seed, bits):
+    """decode∘encode is idempotent on the kept channels: re-encoding an
+    already-quantized buffer reproduces the identical payload (the wire
+    grid is a fixed point), and dropped channels stay exactly zero."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(seed)
+    B = max(1, C // 2)
+    x = jax.random.normal(key, (3, C))
+    idx = jnp.sort(jax.random.permutation(key, C)[:B]).astype(jnp.int32)
+    if bits == 8:
+        enc = lambda v: ops.gather_quantize(v, idx)
+        dec = lambda pl: ops.scatter_dequantize(*pl, idx, C)
+    else:
+        enc = lambda v: ops.gather_quantize_q4(v, idx)
+        dec = lambda pl: ops.scatter_dequantize_q4(*pl, idx, C)
+    y = dec(enc(x))
+    y2 = dec(enc(y))
+    np.testing.assert_array_equal(np.asarray(enc(y)[0]),
+                                  np.asarray(enc(x)[0]))
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y),
+                               rtol=2e-6, atol=0)
+    mask = np.zeros(C); mask[np.asarray(idx)] = 1
+    assert np.all(np.asarray(y)[:, mask == 0] == 0.0)

@@ -37,16 +37,17 @@ def test_plan_bytes_accounting():
 
 def test_plan_bytes_int8_wire():
     """hp.comm_quant == "int8" ships 1-byte elements + one f32 scale per
-    leaf per group member — accounting must use the wire dtype, not
-    param_dtype (which overstated the exchange 4x for f32 models)."""
+    ROW of each leaf's (R, C) view — accounting must use the wire dtype,
+    not param_dtype (which overstated the exchange 4x for f32 models)."""
     plan = SparsityPlan((GroupRule(
         "ffn", (LeafAxis("win", 1), LeafAxis("wout", 0)), groups=32,
         keep=16, stack_ndims=0),))
     shapes = {"win": (8, 32), "wout": (32, 8), "emb": (100, 8)}
     dense, compact = plan_bytes(shapes, plan, {"ffn": 16}, "float32",
                                 wire_dtype="int8")
-    assert dense == (256 + 256 + 800) * 1 + 3 * 4     # + scale per leaf
-    assert compact == (128 + 128 + 800) * 1 + 3 * 4
+    assert dense == (256 + 256 + 800) * 1 + (8 + 32 + 100) * 4
+    # wout compacts 32 -> 16 rows, so its scale overhead halves too
+    assert compact == (128 + 128 + 800) * 1 + (8 + 16 + 100) * 4
     # same wire dtype as accumulation dtype: no scale overhead, unchanged
     d2, c2 = plan_bytes(shapes, plan, {"ffn": 16}, "float32",
                         wire_dtype="float32")

@@ -26,13 +26,17 @@ import json
 import math
 import os
 
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link, intra-pod
-DCI_BW = 5e9                 # bytes/s per chip, inter-pod (10% of ICI)
+from repro.dist.fabric import TPU_V5E, fabric_bw_map
 
-FABRIC_BW = {"model": ICI_BW, "data_intra": ICI_BW, "data_inter": ICI_BW,
-             "pod": DCI_BW}
+# Hardware constants come from the ONE shared fabric table
+# (repro.dist.fabric) — the module-level names are kept as aliases for
+# existing consumers (benchmarks/paper_figs.py imports them).
+PEAK_FLOPS = TPU_V5E.peak_flops   # bf16 per chip
+HBM_BW = TPU_V5E.hbm_bw           # bytes/s per chip
+ICI_BW = TPU_V5E.intra_bw         # bytes/s per link, intra-pod
+DCI_BW = TPU_V5E.inter_bw         # bytes/s per chip, inter-pod (10% of ICI)
+
+FABRIC_BW = fabric_bw_map(TPU_V5E)
 
 
 def active_params(arch: str, n_params: int) -> float:

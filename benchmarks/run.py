@@ -186,8 +186,10 @@ def wire_round_rows(quick=False, reps=None):
         rows.append((f"round.wire_{spec_name}_us", us,
                      f"consensus compute; internode_bytes/round="
                      f"{cells[spec_name]['bytes']}"))
+    from repro.dist.fabric import GBE_1, GBE_10
     b8 = out["q8"][1]
-    for bw, tag in ((0.125e9, "1gbe"), (1.25e9, "10gbe")):
+    for bw, tag in ((GBE_1.inter_bw, GBE_1.name), (GBE_10.inter_bw,
+                                                   GBE_10.name)):
         walls = {s: out[s][0] + out[s][1] / bw * 1e6 for s in specs}
         winner = min(specs, key=lambda s: walls[s])
         rows.append((f"round.wire_wall_{tag}_best_{winner}",

@@ -18,10 +18,12 @@ from .codec import (INDEX_BYTES, CompactMarker, CompositeCodec, DenseCodec,
                     collective_wire_bytes, compose, get_codec, group_sum,
                     leaf_bytes, level_codecs, list_codecs, register_codec,
                     resolve_specs)
+from ..dist.fabric import SelectorPriors
 from .select import AdaptiveWireSelector, BoundaryScore, WireSelection
 
 __all__ = [
     "INDEX_BYTES", "AdaptiveWireSelector", "BoundaryScore", "CompactMarker",
+    "SelectorPriors",
     "CompositeCodec", "DenseCodec", "Q4Codec", "Q8Codec", "TopKCodec",
     "WireCodec", "WireSelection", "collective_wire_bytes", "compose",
     "get_codec", "group_sum", "leaf_bytes", "level_codecs", "list_codecs",

@@ -39,10 +39,12 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dist.fabric import WIRE_PRIORS, SelectorPriors
 from .codec import collective_wire_bytes, get_codec
 
 #: default candidate specs, highest fidelity first (the tie-break order)
@@ -72,6 +74,7 @@ class WireSelection:
     spec_map: tuple                 # one spec string per boundary k=1..K
     scores: list = field(default_factory=list)   # every BoundaryScore
     by_class: dict = field(default_factory=dict)  # rule -> bytes @chosen
+    priors_source: str = "prior"    # "prior" | "measured" (dist.fabric)
 
     def apply(self, engine):
         """A new Engine whose consensus routes through the chosen map."""
@@ -83,6 +86,7 @@ class WireSelection:
 
     def summary(self) -> dict:
         return {"wire_map": list(self.spec_map),
+                "priors_source": self.priors_source,
                 "boundaries": [
                     {"k": s.boundary, "spec": s.spec,
                      "payload_bytes": s.payload_bytes,
@@ -114,14 +118,19 @@ def _boundary_payload_shapes(engine, k: int, candidate) -> dict:
 class AdaptiveWireSelector:
     """Score every candidate codec per boundary, emit the best map.
 
-    Bandwidth priors default to a TPU-pod-ish split (fast intra fabric,
-    ~10x slower top boundary); override them with measured numbers when
-    the deployment has them (``dist.hlo`` reports measured per-fabric
-    bytes; pairing those with wall times gives real GB/s)."""
+    Bandwidth priors default to the shared ``dist.fabric`` wire-priors
+    profile (fast intra fabric, ~10x slower top boundary); pass a
+    :class:`repro.dist.fabric.SelectorPriors` with measured numbers when
+    the deployment has them — ``repro.tune`` stage-2 validation fits
+    GB/s from paired (payload bytes, wall time) observations and feeds
+    it back here, replacing the hardcoded defaults."""
 
     candidates: tuple = CANDIDATES
-    intra_gbps: float = 100.0      # fast-fabric (intra-node) prior
-    inter_gbps: float = 10.0       # slow-fabric (top boundary) prior
+    intra_gbps: float = WIRE_PRIORS.intra_bw / 1e9   # fast-fabric prior
+    inter_gbps: float = WIRE_PRIORS.inter_bw / 1e9   # slow-fabric prior
+    # measured (or otherwise explicit) priors: overrides the two fields
+    # above verbatim when set, and stamps WireSelection.priors_source
+    priors: Optional[SelectorPriors] = None
     probe_rows: int = 64           # probe slab: (g, probe_rows, probe_cols)
     probe_cols: int = 256
     probe_reps: int = 3
@@ -144,12 +153,14 @@ class AdaptiveWireSelector:
         levels = spec.consensus.levels
         K = len(levels)
         dtype = engine.cfg.param_dtype
+        intra = self.priors.intra_gbps if self.priors else self.intra_gbps
+        inter = self.priors.inter_gbps if self.priors else self.inter_gbps
         scores: list[BoundaryScore] = []
         spec_map: list[str] = []
         probe_cache: dict = {}
         for k in range(1, K + 1):
             g = levels[k - 1]
-            gbps = self.inter_gbps if k == K else self.intra_gbps
+            gbps = inter if k == K else intra
             best: BoundaryScore | None = None
             for cand_spec in self.candidates:
                 cand = get_codec(cand_spec)
@@ -186,7 +197,9 @@ class AdaptiveWireSelector:
                 top.wire_bytes(top_shapes[la.key], dtype)
                 for la in rule.all_leaves if la.key in top_shapes)
         return WireSelection(spec_map=tuple(spec_map), scores=scores,
-                             by_class=by_class)
+                             by_class=by_class,
+                             priors_source=self.priors.source
+                             if self.priors else "prior")
 
 
 def _elems(shape) -> int:

@@ -17,17 +17,24 @@ from the optimizer):
 * :mod:`repro.dist.hlo_cost` — trip-count-weighted FLOP/byte/collective
   cost model over the compiled module's call graph,
 * :mod:`repro.dist.monitor` — compile/dispatch counters guarding the
-  fused-round "one dispatch per round" invariant.
+  fused-round "one dispatch per round" invariant,
+* :mod:`repro.dist.fabric` — the ONE shared hardware table (per-chip
+  compute, per-fabric-tier bandwidth) the roofline, the codec selector,
+  and the auto-tuner all price against.
 """
-from . import checkpoint, ft, hlo, hlo_cost, monitor
+from . import checkpoint, fabric, ft, hlo, hlo_cost, monitor
+from .fabric import (FabricProfile, SelectorPriors, boundary_bw,
+                     fabric_bw_map, fit_bandwidth, get_profile)
 from .hlo import Collective, axis_bytes, collective_stats, internode_bytes, \
     summarize
 from .hlo_cost import WeightedCost, weighted_cost
 from .monitor import CallCounter, compile_count, counting
 
 __all__ = [
-    "checkpoint", "ft", "hlo", "hlo_cost", "monitor",
+    "checkpoint", "fabric", "ft", "hlo", "hlo_cost", "monitor",
     "Collective", "axis_bytes", "collective_stats", "internode_bytes",
     "summarize", "WeightedCost", "weighted_cost",
     "CallCounter", "compile_count", "counting",
+    "FabricProfile", "SelectorPriors", "boundary_bw", "fabric_bw_map",
+    "fit_bandwidth", "get_profile",
 ]

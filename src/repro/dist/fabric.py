@@ -1,0 +1,128 @@
+"""One shared fabric table — the single source of truth for hardware
+bandwidth/compute assumptions.
+
+Before this module the same numbers lived in three places: the roofline
+constants (``benchmarks/roofline.py`` PEAK_FLOPS/ICI_BW/DCI_BW), the
+selector's 100/10 GB/s priors (``comm/select.py``), and the ad-hoc
+GbE figures in ``benchmarks/run.py``.  Every consumer now reads a named
+:class:`FabricProfile` from here, so a bandwidth assumption changes in
+exactly one place and the analytic cost model, the codec selector, and
+the auto-tuner (``repro.tune``) can never silently disagree.
+
+Profiles:
+
+  ``tpu_v5e``     the dry-run/roofline hardware model (197 TFLOP/s bf16,
+                  819 GB/s HBM, ~50 GB/s/link ICI, 5 GB/s/chip DCI —
+                  the 10x intra/inter disparity the paper's hierarchy
+                  exploits),
+  ``wire_priors`` the codec selector's default priors (fast-fabric
+                  100 GB/s, slow top boundary 10 GB/s — same 10x ratio,
+                  kept verbatim for selection-map stability),
+  ``10gbe`` / ``1gbe``  commodity Ethernet inter-node legs (the fabrics
+                  the paper's headline wall-clock numbers target);
+                  compute/HBM terms reuse the TPU figures — only the
+                  wire legs differ.
+
+Measured bandwidth beats any prior: :func:`fit_bandwidth` turns paired
+(payload bytes, wall seconds) observations into an effective GB/s and
+:class:`SelectorPriors` carries it into ``AdaptiveWireSelector`` with
+``source="measured"`` (the repro.tune stage-2 feedback loop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence
+
+
+@dataclass(frozen=True)
+class FabricProfile:
+    """Per-chip compute + per-fabric-tier bandwidth assumptions."""
+
+    name: str
+    peak_flops: float   # FLOP/s per chip (bf16)
+    hbm_bw: float       # bytes/s per chip
+    intra_bw: float     # bytes/s, fast fabric (intra-node / ICI)
+    inter_bw: float     # bytes/s, slow fabric (top boundary / DCI / NIC)
+    source: str = "prior"   # "prior" | "measured"
+
+
+TPU_V5E = FabricProfile("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                        intra_bw=50e9, inter_bw=5e9)
+WIRE_PRIORS = FabricProfile("wire_priors", peak_flops=197e12, hbm_bw=819e9,
+                            intra_bw=100e9, inter_bw=10e9)
+GBE_10 = FabricProfile("10gbe", peak_flops=197e12, hbm_bw=819e9,
+                       intra_bw=50e9, inter_bw=1.25e9)
+GBE_1 = FabricProfile("1gbe", peak_flops=197e12, hbm_bw=819e9,
+                      intra_bw=50e9, inter_bw=0.125e9)
+
+PROFILES: dict[str, FabricProfile] = {
+    p.name: p for p in (TPU_V5E, WIRE_PRIORS, GBE_10, GBE_1)}
+
+
+def get_profile(name: str) -> FabricProfile:
+    if name not in PROFILES:
+        raise KeyError(f"unknown fabric profile {name!r}; "
+                       f"known: {sorted(PROFILES)}")
+    return PROFILES[name]
+
+
+def fabric_bw_map(profile: FabricProfile = TPU_V5E) -> dict[str, float]:
+    """Fabric-class -> bytes/s map keyed like ``dist.hlo`` classifies
+    collectives (model/TP and both data tiers ride the fast fabric; only
+    the pod boundary crosses the slow one)."""
+    return {"model": profile.intra_bw, "data_intra": profile.intra_bw,
+            "data_inter": profile.intra_bw, "pod": profile.inter_bw}
+
+
+def boundary_bw(profile: FabricProfile, k: int, K: int) -> float:
+    """Bandwidth of consensus level boundary ``k`` (1..K, innermost
+    first): the top boundary is the slow fabric, everything below rides
+    the fast one — the same convention ``AdaptiveWireSelector`` scores
+    with."""
+    return profile.inter_bw if k == K else profile.intra_bw
+
+
+def fit_bandwidth(bytes_: Sequence[float],
+                  seconds: Sequence[float]) -> Optional[float]:
+    """Effective bytes/s from paired (payload bytes, wall seconds)
+    observations: the least-squares slope of seconds over bytes, i.e. a
+    shared per-measurement offset (compute, dispatch) cancels and only
+    the byte-proportional wire leg is fitted.  Returns None when the
+    observations can't support a fit (fewer than two distinct byte
+    counts, or a non-positive slope — noise swamped the signal)."""
+    xs = [float(b) for b in bytes_]
+    ys = [float(s) for s in seconds]
+    if len(xs) != len(ys) or len(set(xs)) < 2:
+        return None
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    if sxx <= 0.0 or sxy <= 0.0:
+        return None
+    slope = sxy / sxx          # seconds per byte
+    return 1.0 / slope
+
+
+@dataclass(frozen=True)
+class SelectorPriors:
+    """Bandwidth priors the codec selector scores with.  Defaults are the
+    shared ``wire_priors`` profile; stage-2 measured runs replace them
+    via :meth:`measured` (repro.tune) so selection reflects the fabric
+    the deployment actually has."""
+
+    intra_gbps: float = WIRE_PRIORS.intra_bw / 1e9
+    inter_gbps: float = WIRE_PRIORS.inter_bw / 1e9
+    source: str = "prior"
+
+    @classmethod
+    def from_profile(cls, profile: FabricProfile) -> "SelectorPriors":
+        return cls(intra_gbps=profile.intra_bw / 1e9,
+                   inter_gbps=profile.inter_bw / 1e9,
+                   source=profile.source)
+
+    def with_measured_inter(self, inter_bps: float) -> "SelectorPriors":
+        """Replace the slow-fabric prior with a fitted bytes/s figure
+        (``fit_bandwidth``); the intra prior is kept — single-host
+        measurements only exercise the top boundary's payload deltas."""
+        return replace(self, inter_gbps=inter_bps / 1e9, source="measured")

@@ -18,9 +18,22 @@ worker 3::
 
     policy = ft.compose(ft.fail_window({0: (10, 20)}),
                         ft.straggler_decay({3: 0.25}, halflife=8))
+
+Policies built through these factories carry a canonical ``.spec``
+string (``policy.spec``), and :func:`from_spec` reconstructs the policy
+from it — this is what makes ``RunConfig.to_json`` round-trippable: a
+serialized run records the policy *name + arguments*, not a pickled
+callable.  Grammar (composition joins parts with ``"|"``)::
+
+    healthy
+    constant:[1.0, 0.5]
+    fail_window:{"0": [10, 20]}
+    straggler_decay:{"halflife": 8, "stragglers": {"3": 0.25}}
+    fail_window:{"0": [10, 20]}|straggler_decay:{...}
 """
 from __future__ import annotations
 
+import json
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
@@ -34,7 +47,10 @@ def _ones(W: int) -> np.ndarray:
 
 def healthy() -> Policy:
     """All workers contribute fully (the identity policy)."""
-    return lambda k, W: _ones(W)
+    def policy(k: int, W: int) -> np.ndarray:
+        return _ones(W)
+    policy.spec = "healthy"
+    return policy
 
 
 def fail_window(windows: Mapping[int, tuple[int, int]]) -> Policy:
@@ -53,6 +69,8 @@ def fail_window(windows: Mapping[int, tuple[int, int]]) -> Policy:
             if 0 <= j < W and k0 <= k < k1:
                 w[j] = 0.0
         return w
+    policy.spec = "fail_window:" + json.dumps(
+        {str(j): list(win) for j, win in windows.items()}, sort_keys=True)
     return policy
 
 
@@ -80,6 +98,10 @@ def straggler_decay(stragglers: Mapping[int, float],
             else:
                 w[j] = f
         return w
+    policy.spec = "straggler_decay:" + json.dumps(
+        {"halflife": int(halflife),
+         "stragglers": {str(j): f for j, f in stragglers.items()}},
+        sort_keys=True)
     return policy
 
 
@@ -92,14 +114,47 @@ def constant(weights: Sequence[float]) -> Policy:
         n = min(W, base.shape[0])
         w[:n] = base[:n]
         return w
+    policy.spec = "constant:" + json.dumps([float(x) for x in base])
     return policy
 
 
 def compose(*policies: Policy) -> Policy:
-    """Elementwise product of policies — failures and discounts stack."""
+    """Elementwise product of policies — failures and discounts stack.
+    The composite carries a ``.spec`` only when every part does."""
     def policy(k: int, W: int) -> np.ndarray:
         w = _ones(W)
         for p in policies:
             w = w * np.asarray(p(k, W), np.float32)
         return w.astype(np.float32)
+    specs = [getattr(p, "spec", None) for p in policies]
+    if specs and all(s is not None for s in specs):
+        policy.spec = "|".join(specs)
     return policy
+
+
+def from_spec(spec: str) -> Policy:
+    """Rebuild a policy from its canonical ``.spec`` string (see module
+    docstring for the grammar).  Round-trip stable: the returned policy
+    carries a ``.spec`` equal to re-canonicalizing the input."""
+    parts = [p for p in spec.split("|") if p]
+    if not parts:
+        raise ValueError(f"empty ft policy spec {spec!r}")
+    built = []
+    for part in parts:
+        name, _, args = part.partition(":")
+        if name == "healthy":
+            built.append(healthy())
+        elif name == "constant":
+            built.append(constant(json.loads(args)))
+        elif name == "fail_window":
+            wins = json.loads(args)
+            built.append(fail_window(
+                {int(j): tuple(win) for j, win in wins.items()}))
+        elif name == "straggler_decay":
+            d = json.loads(args)
+            built.append(straggler_decay(
+                {int(j): f for j, f in d["stragglers"].items()},
+                halflife=d.get("halflife", 0)))
+        else:
+            raise ValueError(f"unknown ft policy {name!r} in spec {spec!r}")
+    return built[0] if len(built) == 1 else compose(*built)

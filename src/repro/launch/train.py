@@ -27,7 +27,16 @@ from .mesh import make_host_mesh
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture name (required unless --from-json)")
+    ap.add_argument("--from-json", default=None, metavar="WINNER",
+                    help="launch a repro.tune winner spec "
+                         "(experiments/tune/winner_<topology>.json): the "
+                         "engine and RunConfig are rebuilt from the spec "
+                         "verbatim; every other config flag is ignored")
+    ap.add_argument("--outer-iters-override", type=int, default=None,
+                    help="with --from-json: cap/override the spec's "
+                         "outer_iters (smoke-launching a winner)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--shape", default=None, help="named shape (train_4k)")
     ap.add_argument("--batch", type=int, default=8)
@@ -83,6 +92,22 @@ def main(argv=None):
                          "analytic plan_bytes volumes")
     ap.add_argument("--report", default=None, help="write JSON report here")
     args = ap.parse_args(argv)
+
+    if args.from_json:
+        import dataclasses
+        from ..tune.artifacts import load_winner
+        eng, run, cand = load_winner(args.from_json)
+        if args.outer_iters_override is not None:
+            run = dataclasses.replace(
+                run, outer_iters=args.outer_iters_override)
+        print(f"[from-json] launching {cand.name} "
+              f"({run.outer_iters} outer iters, wire_map="
+              f"{list(run.wire_map) if run.wire_map else None})")
+        _, rep = train(eng, run)
+        _finish(args, rep)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --from-json is given")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     hp = cfg.hsadmm
@@ -167,6 +192,10 @@ def main(argv=None):
                       f"wire={h['summary']['total_wire_bytes']/1e6:.3f}MB "
                       f"internode={h['internode_bytes']/1e6:.3f}MB "
                       f"by_fabric={h['axis_bytes']}")
+    _finish(args, rep)
+
+
+def _finish(args, rep):
     if args.report:
         with open(args.report, "w") as f:
             json.dump({k: v for k, v in rep.__dict__.items()
@@ -175,7 +204,7 @@ def main(argv=None):
         print("final loss:", rep.losses[-1])
     else:
         print("no iterations run (checkpoint already at/after "
-              f"--outer-iters={args.outer_iters})")
+              "the configured outer iteration count)")
 
 
 if __name__ == "__main__":

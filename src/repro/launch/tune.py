@@ -1,0 +1,212 @@
+"""Auto-tuner launcher (repro.tune).
+
+    # full two-stage tune of the default grid
+    PYTHONPATH=src python -m repro.launch.tune --arch resnet18 --smoke
+
+    # CI smoke: tiny grid, analytic stage 1 only, still writes artifacts
+    PYTHONPATH=src python -m repro.launch.tune --quick --dry-run-only
+
+Stage 1 prices every (keep, codec, E, W, reconfig, topology) candidate
+with the analytic cost model (real compiled-HLO FLOP/byte tables + the
+shared wire-byte formulas) as estimated time-to-target-loss; stage 2
+re-ranks the survivors with short measured fused rounds, fits bandwidth
+priors from the observations, and re-runs the adaptive codec selector
+under them.  Outputs:
+
+  * ``<out>/winner_<topology>.json`` — launchable via
+    ``python -m repro.launch.train --from-json <path>``;
+  * ``experiments/bench/fig8_breakdown.json`` — the Fig. 8 comm-time
+    decomposition, regenerated from the real cost tables;
+  * ``BENCH_tune.json`` — the perf-trajectory artifact re-anchors read.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from ..configs.base import ShapeConfig
+from ..dist.fabric import get_profile
+from ..tune import artifacts as art
+from ..tune import measure as ms
+from ..tune.cost import ConvergenceModel, build_tables, sweep
+from ..tune.space import TOPOLOGIES, TuneSpace
+
+
+def _csv(s, cast):
+    out = []
+    for part in s.split(","):
+        part = part.strip()
+        if part.lower() in ("none", ""):
+            out.append(None)
+        else:
+            out.append(cast(part))
+    return tuple(out)
+
+
+def build_space(args) -> TuneSpace:
+    space = TuneSpace(arch=args.arch, smoke=args.smoke or args.quick,
+                      node_size=args.node_size)
+    if args.quick:
+        space = dataclasses.replace(
+            space, topologies=("chip", "flat"), keeps=(0.5,),
+            local_steps=(2,), codecs=("dense", "compact+q8"),
+            reconfig_rounds=(None, 6))
+    over = {}
+    if args.topologies:
+        over["topologies"] = _csv(args.topologies, str)
+    if args.workers:
+        over["workers"] = _csv(args.workers, int)
+    if args.keeps:
+        over["keeps"] = _csv(args.keeps, float)
+    if args.e:
+        over["local_steps"] = _csv(args.e, int)
+    if args.codecs:
+        over["codecs"] = _csv(args.codecs, str)
+    if args.reconfig:
+        over["reconfig_rounds"] = _csv(args.reconfig, int)
+    return dataclasses.replace(space, **over) if over else space
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="resnet18")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-scale arch configs (CI-sized models)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny grid + smoke arch: the CI/e2e profile")
+    ap.add_argument("--dry-run-only", action="store_true",
+                    help="stage 1 only — no measured runs (artifacts are "
+                         "still written, from the analytic tables)")
+    ap.add_argument("--topk", type=int, default=None,
+                    help="stage-2 candidates (deduped; default 4, "
+                         "quick: 2)")
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="measured fused rounds per stage-2 cell")
+    # grid overrides (comma lists; 'none' allowed in --reconfig)
+    ap.add_argument("--topologies", default=None,
+                    help=f"comma list from {TOPOLOGIES}")
+    ap.add_argument("--workers", default=None, help="comma list of W")
+    ap.add_argument("--keeps", default=None, help="comma list of keep")
+    ap.add_argument("--e", default=None, help="comma list of E")
+    ap.add_argument("--codecs", default=None,
+                    help="comma list of top-boundary codec specs")
+    ap.add_argument("--reconfig", default=None,
+                    help="comma list of reconfig rounds ('none' allowed)")
+    ap.add_argument("--node-size", type=int, default=2)
+    ap.add_argument("--target-steps", type=int, default=None,
+                    help="ConvergenceModel local steps to target "
+                         "(default 512, quick: 64)")
+    ap.add_argument("--fabric", default="tpu_v5e",
+                    help="dist.fabric profile pricing the wire legs")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32,
+                    help="sequence length / image size of the tune shape")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="experiments/tune")
+    ap.add_argument("--fig8-out",
+                    default="experiments/bench/fig8_breakdown.json")
+    ap.add_argument("--bench-out", default="BENCH_tune.json")
+    args = ap.parse_args(argv)
+
+    space = build_space(args)
+    fabric = get_profile(args.fabric)
+    target = args.target_steps if args.target_steps is not None \
+        else (64 if args.quick else 512)
+    conv = ConvergenceModel(target_steps=target)
+    topk = args.topk if args.topk is not None \
+        else (2 if args.quick else 4)
+    shape = ShapeConfig("tune", "train", args.seq, args.batch)
+
+    print(f"[tune] stage 1: pricing {space.size()} candidates "
+          f"({space.arch}{' smoke' if space.smoke else ''}, "
+          f"fabric={fabric.name}, target_steps={target})")
+    tables = build_tables(space, shape, log=print)
+    ests = sweep(space, tables, fabric, conv)
+    if not ests:
+        raise SystemExit("empty candidate space")
+    for e in ests[:topk]:
+        print(f"[tune:stage1] {e.candidate.name}: "
+              f"{e.time_s:.3f}s est ({e.rounds_total} rounds, "
+              f"{e.rounds_shrunk} shrunk)")
+
+    # stage 2: measured validation + bandwidth feedback
+    result = None
+    priors = None
+    selection = None
+    if not args.dry_run_only:
+        result = ms.validate(ests, shape, topk=topk, rounds=args.rounds,
+                             seed=args.seed, log=print)
+        best_cell = result.best()
+        if best_cell is not None:
+            priors = ms.fit_priors(best_cell.candidate, shape,
+                                   seed=args.seed, log=print)
+            selection = ms.reselect(best_cell.candidate, shape, priors,
+                                    seed=args.seed)
+            print("[tune:reselect] " + selection.to_json())
+
+    # winners per topology: measured wall when the topology has measured
+    # cells, stage-1 estimate otherwise; the winner SPEC is always the
+    # cheapest stage-1 candidate of the winning measurement cell (it
+    # carries the reconfig choice stage 2 deliberately collapses)
+    winners = {}
+    measured_by_key = {ms.measurement_key(c.candidate): c
+                       for c in (result.cells if result else [])}
+    for topo in space.topologies:
+        topo_ests = [e for e in ests if e.candidate.topology == topo]
+        if not topo_ests:
+            continue
+        cell = result.best(topo) if result else None
+        if cell is not None:
+            key = ms.measurement_key(cell.candidate)
+            est = next(e for e in topo_ests
+                       if ms.measurement_key(e.candidate) == key)
+        else:
+            est = topo_ests[0]
+        cand = est.candidate
+        table = tables[(cand.topology, cand.workers, cand.keep)]
+        run = art.winner_run_config(cand, est, shape, table.t_freeze,
+                                    seed=args.seed)
+        mrow = measured_by_key.get(ms.measurement_key(cand))
+        path = os.path.join(args.out, f"winner_{topo}.json")
+        art.emit_winner(path, cand, est, run,
+                        measured=mrow.to_row() if mrow else None,
+                        fabric=fabric.name)
+        winners[topo] = {"candidate": cand.name,
+                         "est_time_s": est.time_s,
+                         "measured_round_s":
+                             mrow.wall_s if mrow else None,
+                         "spec": path}
+        print(f"[tune] winner[{topo}] = {cand.name} -> {path}")
+
+    fig8 = art.fig8_payload(ests, fabric=fabric.name, arch=space.arch)
+    art._write_json(args.fig8_out, fig8)
+    print(f"[tune] wrote {args.fig8_out} "
+          f"(best={fig8.get('best')}, "
+          f"{fig8.get('candidates_priced')} candidates)")
+
+    bench = art.bench_payload(
+        space_json={"arch": space.arch, "smoke": space.smoke,
+                    "topologies": list(space.topologies),
+                    "workers": list(space.workers),
+                    "keeps": list(space.keeps),
+                    "local_steps": list(space.local_steps),
+                    "codecs": list(space.codecs),
+                    "reconfig_rounds": list(space.reconfig_rounds),
+                    "size": space.size()},
+        fabric=fabric.name, stage1=ests, winners=winners,
+        measured=[c.to_row() for c in result.cells] if result else None,
+        steady_compiles=result.steady_compiles if result else None,
+        priors=dataclasses.asdict(priors) if priors else None,
+        reselected=selection.summary() if selection else None)
+    art._write_json(args.bench_out, bench)
+    print(f"[tune] wrote {args.bench_out}")
+    if result is not None and result.steady_compiles:
+        print(f"[tune] WARNING: {result.steady_compiles} steady-state "
+              "recompiles during stage 2 — measurements are suspect")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

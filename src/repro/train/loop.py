@@ -117,6 +117,62 @@ class RunConfig:
     reconfig_patience: Optional[int] = None
     log: Optional[Callable] = print
 
+    # ------------------------------------------------------------------ #
+    # JSON serialization — the repro.tune unlock: a tuner (or any tool)
+    # can emit a winning RunConfig as JSON and `launch/train.py
+    # --from-json` launches it directly.  Process-local callables
+    # (eval_fn, log) are NOT serialized; ft_policy serializes by its
+    # canonical dist.ft spec string (factories attach `.spec`).
+    # ------------------------------------------------------------------ #
+
+    _JSON_SKIP = ("eval_fn", "log")
+
+    def to_json(self) -> dict:
+        """Plain-JSON dict of this run, bit-stable through
+        :meth:`from_json` (incl. wire_map and the reconfig fields)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name in self._JSON_SKIP:
+                continue
+            v = getattr(self, f.name)
+            if f.name == "shape":
+                v = dataclasses.asdict(v)
+            elif f.name == "ft_policy" and v is not None:
+                spec = getattr(v, "spec", None)
+                if spec is None:
+                    raise ValueError(
+                        "RunConfig.ft_policy is not serializable: build "
+                        "it through the repro.dist.ft factories (they "
+                        "attach a canonical .spec) or ft.from_spec")
+                v = spec
+            elif f.name == "wire_map" and v is not None:
+                v = list(v)
+            out[f.name] = v
+        return out
+
+    @staticmethod
+    def from_json(d: dict) -> "RunConfig":
+        """Inverse of :meth:`to_json` (eval_fn/log take their
+        defaults).  Unknown keys raise — a config emitted by a newer
+        schema should fail loudly, not train a subtly different run."""
+        from ..dist import ft as _ft
+        d = dict(d)
+        shape = ShapeConfig(**d.pop("shape"))
+        ft_spec = d.pop("ft_policy", None)
+        wm = d.pop("wire_map", None)
+        known = {f.name for f in dataclasses.fields(RunConfig)
+                 if f.name not in RunConfig._JSON_SKIP + ("shape",
+                                                          "ft_policy",
+                                                          "wire_map")}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown RunConfig JSON keys: "
+                             f"{sorted(unknown)}")
+        return RunConfig(
+            shape=shape,
+            ft_policy=_ft.from_spec(ft_spec) if ft_spec else None,
+            wire_map=tuple(wm) if wm is not None else None, **d)
+
 
 @dataclass
 class TrainReport:

@@ -1,0 +1,42 @@
+"""repro.tune — cost-model-driven auto-tuner over the
+(keep, codec, E, W, reconfig, topology) space (ROADMAP item; the knobs
+the paper tunes by hand in §5).
+
+Two stages:
+
+  1. :mod:`.cost` sweeps the analytic model over the whole
+     :class:`.space.TuneSpace` grid — real compiled-HLO FLOP/byte
+     tables (``dist.hlo_cost``) + the shared wire-byte formulas
+     (``comm.collective_wire_bytes``) + a documented convergence
+     fiction, priced as estimated time-to-target-loss with the
+     reconfiguration point splitting full-shape and shrunk-shape
+     phases;
+  2. :mod:`.measure` validates the survivors with short MEASURED fused
+     rounds (paired-delta interleaved timing, zero-recompile guard via
+     ``dist.monitor``), fits bandwidth from the observations back into
+     :class:`repro.dist.fabric.SelectorPriors`, and re-runs the
+     adaptive codec selector under them.
+
+:mod:`.artifacts` turns the result into launchable winner configs
+(``launch/train.py --from-json``) and the fig8/BENCH JSON artifacts.
+CLI: ``python -m repro.launch.tune`` (``--quick`` for the smoke grid).
+"""
+from .cost import (CandidateTable, ConvergenceModel, Estimate, PhaseCost,
+                   build_tables, price, sweep)
+from .measure import (MeasuredCell, ValidateResult, fit_priors,
+                      measurement_key, reselect, validate)
+from .space import (TOPOLOGIES, Candidate, TuneSpace, consensus_for,
+                    engine_for, num_boundaries)
+from .artifacts import (bench_payload, emit_winner, fig8_payload,
+                        load_winner, winner_run_config)
+
+__all__ = [
+    "CandidateTable", "ConvergenceModel", "Estimate", "PhaseCost",
+    "build_tables", "price", "sweep",
+    "MeasuredCell", "ValidateResult", "fit_priors", "measurement_key",
+    "reselect", "validate",
+    "TOPOLOGIES", "Candidate", "TuneSpace", "consensus_for",
+    "engine_for", "num_boundaries",
+    "bench_payload", "emit_winner", "fig8_payload", "load_winner",
+    "winner_run_config",
+]

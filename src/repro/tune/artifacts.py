@@ -1,0 +1,157 @@
+"""Tuner artifacts: launchable winner configs + bench JSON.
+
+Three outputs, all plain JSON:
+
+  * ``winner_<topology>.json`` (``emit_winner``/``load_winner``) — a
+    versioned launch spec: the winning :class:`~repro.tune.space.
+    Candidate`, its stage-1 estimate (and stage-2 measurement when one
+    ran), and a fully-serialized :class:`repro.train.loop.RunConfig`.
+    ``launch/train.py --from-json`` loads it straight into an engine +
+    ``train()`` call through the same ``tune.space.engine_for`` path the
+    tuner priced, so the launched run IS the priced configuration;
+
+  * ``experiments/bench/fig8_breakdown.json`` (``fig8_payload``) — the
+    paper's Fig. 8 communication-time decomposition, regenerated from
+    the tuner's real cost tables instead of the long-standing
+    ``{"skipped": ...}`` stub: per-fabric wire seconds + roofline
+    compute of the winning candidate's full-shape round, plus the
+    per-candidate breakdown rows CI schema-checks;
+
+  * ``BENCH_tune.json`` at repo root (``bench_payload``) — the
+    perf-trajectory artifact future re-anchors read: stage-1 winners
+    per topology, stage-2 measured cells, the fitted bandwidth priors,
+    and the reselected wire map.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from ..train.loop import RunConfig
+from .cost import Estimate
+from .space import Candidate, engine_for
+
+WINNER_VERSION = 1
+
+
+def _write_json(path: str, payload: dict) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+# --------------------------------------------------------------------- #
+# winner launch specs
+# --------------------------------------------------------------------- #
+
+
+def winner_run_config(cand: Candidate, est: Estimate, shape,
+                      t_freeze: int, *, seed: int = 0) -> RunConfig:
+    """The RunConfig a winning candidate launches with: the estimated
+    rounds-to-target as the iteration budget, the candidate's wire map
+    (the loop rebuilds the engine spec around it), and the reconfig
+    trigger expressed as patience-after-freeze (the loop's knob)."""
+    reconfig = cand.reconfig_round is not None
+    patience = max(int(cand.reconfig_round) - int(t_freeze), 1) \
+        if reconfig else None
+    return RunConfig(outer_iters=est.rounds_total, shape=shape,
+                     seed=seed, wire_map=tuple(cand.wire_map),
+                     reconfig=reconfig, reconfig_patience=patience)
+
+
+def emit_winner(path: str, cand: Candidate, est: Estimate,
+                run: RunConfig, *, measured: Optional[dict] = None,
+                fabric: str = "tpu_v5e") -> str:
+    """Write one launchable winner spec (see module docstring)."""
+    payload = {
+        "version": WINNER_VERSION,
+        "fabric": fabric,
+        "candidate": cand.to_json(),
+        "estimate": est.to_row(),
+        "measured": measured,
+        "run": run.to_json(),
+    }
+    return _write_json(path, payload)
+
+
+def load_winner(path: str):
+    """(engine, RunConfig) from a winner spec — the ``--from-json``
+    loader.  The engine comes from ``tune.space.engine_for`` (identical
+    to what the tuner priced); the wire map rides the RunConfig and is
+    applied by the training loop."""
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("version") != WINNER_VERSION:
+        raise ValueError(f"{path}: winner spec version "
+                         f"{d.get('version')!r} != {WINNER_VERSION}")
+    cand = Candidate.from_json(d["candidate"])
+    run = RunConfig.from_json(d["run"])
+    return engine_for(cand, run.shape), run, cand
+
+
+# --------------------------------------------------------------------- #
+# fig8 + BENCH payloads
+# --------------------------------------------------------------------- #
+
+
+def fig8_payload(ests: list, *, fabric: str, arch: str,
+                 max_rows: int = 24) -> dict:
+    """Fig. 8 communication-time decomposition from the stage-1 tables.
+
+    The headline ``seconds``/``fraction`` split (matching the schema
+    ``benchmarks/paper_figs.fig8_breakdown`` produced) decomposes the
+    BEST candidate's full-shape round into roofline compute, fast-fabric
+    wire time (all boundaries below the top), and slow-fabric wire time
+    (the top boundary).  ``rows`` carries every candidate's estimate for
+    the breakdown table (truncated to ``max_rows``; the count says so)."""
+    if not ests:
+        return {"skipped": "empty candidate space"}
+    best = ests[0]
+    t = best.full_terms
+    by_level = t.get("wire_s_by_level", [])
+    seconds = {
+        "compute (roofline)": max(t["compute_s"], t["memory_s"]),
+        "intra_fabric wire": sum(by_level[:-1]) if by_level else 0.0,
+        "inter_fabric wire": by_level[-1] if by_level else t["wire_s"],
+    }
+    tot = sum(seconds.values()) or 1.0
+    return {
+        "source": "repro.tune stage-1 cost tables (real compiled HLO)",
+        "fabric": fabric,
+        "arch": arch,
+        "best": best.candidate.name,
+        "seconds": seconds,
+        "fraction": {k: v / tot for k, v in seconds.items()},
+        "candidates_priced": len(ests),
+        "rows": [e.to_row() for e in ests[:max_rows]],
+    }
+
+
+def bench_payload(*, space_json: dict, fabric: str, stage1: list,
+                  winners: dict, measured: Optional[list] = None,
+                  steady_compiles: Optional[int] = None,
+                  priors: Optional[dict] = None,
+                  reselected: Optional[dict] = None,
+                  top_rows: int = 12) -> dict:
+    """The ``BENCH_tune.json`` perf-trajectory artifact."""
+    return {
+        "bench": "repro.tune",
+        "fabric": fabric,
+        "space": space_json,
+        "candidates_priced": len(stage1),
+        "stage1_top": [e.to_row() for e in stage1[:top_rows]],
+        "winners": winners,          # topology -> winner summary dict
+        "stage2": {
+            "cells": measured,       # None under --dry-run-only
+            "steady_compiles": steady_compiles,
+        },
+        "priors": priors,            # fitted SelectorPriors (or analytic)
+        "reselected_wire_map": reselected,
+    }

@@ -1,0 +1,330 @@
+"""Stage-1 analytic pricing: estimated time-to-target-loss per candidate.
+
+Pure dry-run — no training step ever executes.  Per candidate the
+estimate decomposes exactly like the roofline (``benchmarks/roofline``):
+
+    round_s  = max(compute_s, memory_s) + wire_s
+    compute_s = (E * local_flops + cons_flops) / fabric.peak_flops
+    memory_s  = (E * local_bytes + cons_bytes) / fabric.hbm_bw
+    wire_s    = sum over boundaries k of
+                collective_wire_bytes(kind, g_k, payload_k) / bw_k
+
+where local/consensus FLOPs+bytes come from the trip-weighted
+``dist.hlo_cost`` model over the AOT-compiled executables, and
+``payload_k`` prices the boundary's payload leaves through the
+candidate codec's ``WireCodec.wire_bytes`` — the same two formulas the
+measured-HLO accounting verifies in CI, so stage-1 numbers and measured
+numbers share their byte model.
+
+The reconfiguration point splits the run into two phases priced
+separately: rounds before ``reconfig_round`` run at FULL shapes (the
+first ``t_freeze`` of them dynamic, paying the Phase-3 mask-agreement
+bytes), rounds after it at the physically-shrunk shapes (whose
+executables are compiled from the actual reconfigured engine, exactly
+what ``Engine.reconfigure`` would trace).
+
+Rounds-to-target comes from :class:`ConvergenceModel` — an explicit,
+deliberately simple statistical-efficiency fiction (see DESIGN.md):
+total local steps to target is roughly constant, inflated by aggressive
+pruning and by consensus staleness at large E.  Stage 2 exists because
+this model is a ranking device, not a truth; the measured runs keep it
+honest.
+
+Deliberate simplifications (all recorded in DESIGN.md):
+  * codec encode/decode compute is NOT priced in stage 1 (bytes only) —
+    stage 2 measures it, and ``AdaptiveWireSelector`` probes it when
+    re-selecting;
+  * consensus FLOPs/bytes are compiled per (topology, W, keep) but the
+    LOCAL step is cached per (topology, W) — its executable does not
+    depend on the keep budget;
+  * the one-time retrace compile at the reconfig point is not priced
+    (it amortizes over any non-trivial shrunk phase).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..comm import collective_wire_bytes, get_codec
+from ..core.shrinkage import mask_sync_bytes, plan_payload_shapes
+from ..dist.fabric import TPU_V5E, FabricProfile, boundary_bw
+from ..dist.hlo_cost import weighted_cost
+from .space import Candidate, TuneSpace, engine_for
+
+
+@dataclass(frozen=True)
+class PhaseCost:
+    """Compiled + analytic cost inputs of one phase (full or shrunk)."""
+
+    local_flops: float              # one local step, per device
+    local_bytes: float
+    cons_flops: float               # one consensus, per device
+    cons_bytes: float
+    param_shapes: dict              # leaf key -> shape (this phase)
+    compact_shapes: dict            # leaf key -> compacted payload shape
+    mask_bytes: int = 0             # Phase-3 agreement (dynamic rounds)
+
+
+@dataclass(frozen=True)
+class CandidateTable:
+    """Everything ``price`` needs for one (topology, W, keep) cell."""
+
+    topology: str
+    workers: int
+    node_size: int
+    levels: tuple
+    compact_from_level: int
+    t_freeze: int
+    param_dtype: str
+    keep: float
+    full: PhaseCost
+    shrunk: Optional[PhaseCost] = None   # None: reconfig not priceable
+
+
+@dataclass(frozen=True)
+class ConvergenceModel:
+    """Rounds-to-target estimator (the target-loss fiction, DESIGN.md).
+
+    ``target_steps`` local prox-SGD steps reach the target at keep=1;
+    pruning to keep<1 inflates them by ``keep_penalty * (1-keep)``
+    (structured sparsity costs statistical efficiency), and large E
+    inflates by ``staleness_penalty * (E-1)/E`` (consensus staleness —
+    local iterates drift longer between projections)."""
+
+    target_steps: int = 512
+    keep_penalty: float = 0.5
+    staleness_penalty: float = 0.15
+
+    def rounds_to_target(self, E: int, keep: float) -> int:
+        E = max(E, 1)
+        steps = self.target_steps \
+            * (1.0 + self.keep_penalty * (1.0 - keep)) \
+            * (1.0 + self.staleness_penalty * (E - 1) / E)
+        return max(1, math.ceil(steps / E))
+
+
+@dataclass
+class Estimate:
+    """One priced candidate: the stage-1 output row."""
+
+    candidate: Candidate
+    rounds_total: int
+    rounds_full: int          # rounds at full shapes (incl. dynamic)
+    rounds_dynamic: int       # the mask-sync-paying prefix
+    rounds_shrunk: int
+    full_terms: dict          # compute_s / memory_s / wire_s / round_s
+    shrunk_terms: Optional[dict]
+    time_s: float = 0.0
+
+    def to_row(self) -> dict:
+        c = self.candidate
+        row = {"name": c.name, "topology": c.topology,
+               "workers": c.workers, "keep": c.keep, "E": c.local_steps,
+               "wire_map": list(c.wire_map),
+               "reconfig_round": c.reconfig_round,
+               "rounds_total": self.rounds_total,
+               "rounds_full": self.rounds_full,
+               "rounds_shrunk": self.rounds_shrunk,
+               "time_s": self.time_s}
+        for k, v in self.full_terms.items():
+            row[f"full_{k}"] = v
+        for k, v in (self.shrunk_terms or {}).items():
+            row[f"shrunk_{k}"] = v
+        return row
+
+
+# --------------------------------------------------------------------- #
+# pricing (pure: candidate x table x fabric x convergence -> Estimate)
+# --------------------------------------------------------------------- #
+
+
+def _boundary_payload_bytes(phase: PhaseCost, codec, k: int,
+                            compact_from_level: int, dtype) -> int:
+    compact = (k - 1) >= compact_from_level or codec.compact
+    shapes = phase.compact_shapes if compact else phase.param_shapes
+    return sum(codec.wire_bytes(s, dtype) for s in shapes.values())
+
+
+def _phase_terms(phase: PhaseCost, cand: Candidate, table: CandidateTable,
+                 fabric: FabricProfile, dynamic: bool) -> dict:
+    E = max(cand.local_steps, 1)
+    K = len(table.levels)
+    compute_s = (E * phase.local_flops + phase.cons_flops) \
+        / fabric.peak_flops
+    memory_s = (E * phase.local_bytes + phase.cons_bytes) / fabric.hbm_bw
+    wire_s = 0.0
+    wire_by_level = []
+    for k in range(1, K + 1):
+        g = table.levels[k - 1]
+        codec = get_codec(cand.wire_map[k - 1])
+        payload = _boundary_payload_bytes(phase, codec, k,
+                                          table.compact_from_level,
+                                          table.param_dtype)
+        kind = "all-gather" if codec.gather else "all-reduce"
+        fabric_b = collective_wire_bytes(kind, g, payload)
+        if dynamic and k == K:
+            # Phase-3 mask agreement is a global exchange; price it once,
+            # on the slow fabric it has to cross
+            fabric_b += collective_wire_bytes("all-reduce", g,
+                                              phase.mask_bytes)
+        s = fabric_b / boundary_bw(fabric, k, K)
+        wire_by_level.append(s)
+        wire_s += s
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "wire_s": wire_s, "wire_s_by_level": wire_by_level,
+            "round_s": max(compute_s, memory_s) + wire_s}
+
+
+def price(cand: Candidate, table: CandidateTable,
+          fabric: FabricProfile = TPU_V5E,
+          convergence: ConvergenceModel = ConvergenceModel()) -> Estimate:
+    """Estimated time-to-target-loss of one candidate, phase-split at
+    the reconfiguration point."""
+    if len(cand.wire_map) != len(table.levels):
+        raise ValueError(
+            f"candidate wire_map has {len(cand.wire_map)} entries for "
+            f"{len(table.levels)} level boundaries ({table.topology})")
+    rounds = convergence.rounds_to_target(cand.local_steps, cand.keep)
+    r = cand.reconfig_round
+    if r is None or table.shrunk is None:
+        rounds_full = rounds
+    else:
+        # the retrace can only happen after masks freeze
+        rounds_full = min(max(int(r), table.t_freeze + 1), rounds)
+    rounds_shrunk = rounds - rounds_full
+    rounds_dynamic = min(table.t_freeze, rounds_full)
+
+    dyn = _phase_terms(table.full, cand, table, fabric, dynamic=True)
+    frz = _phase_terms(table.full, cand, table, fabric, dynamic=False)
+    shrunk_terms = None
+    time_s = rounds_dynamic * dyn["round_s"] \
+        + (rounds_full - rounds_dynamic) * frz["round_s"]
+    if rounds_shrunk > 0:
+        shrunk_terms = _phase_terms(table.shrunk, cand, table, fabric,
+                                    dynamic=False)
+        time_s += rounds_shrunk * shrunk_terms["round_s"]
+    return Estimate(candidate=cand, rounds_total=rounds,
+                    rounds_full=rounds_full, rounds_dynamic=rounds_dynamic,
+                    rounds_shrunk=rounds_shrunk, full_terms=frz,
+                    shrunk_terms=shrunk_terms, time_s=time_s)
+
+
+def sweep(space: TuneSpace, tables: dict,
+          fabric: FabricProfile = TPU_V5E,
+          convergence: ConvergenceModel = ConvergenceModel()
+          ) -> list[Estimate]:
+    """Price every candidate in the space against its (topology, W,
+    keep) table; cheapest first, name-tiebroken so the ranking is
+    deterministic under equal scores."""
+    ests = [price(c, tables[(c.topology, c.workers, c.keep)], fabric,
+                  convergence)
+            for c in space.enumerate()]
+    ests.sort(key=lambda e: (e.time_s, e.candidate.name))
+    return ests
+
+
+# --------------------------------------------------------------------- #
+# table construction (the only part of stage 1 that compiles anything)
+# --------------------------------------------------------------------- #
+
+
+def _param_shapes(eng) -> dict:
+    from ..core.hsadmm import flatten
+    p0 = jax.eval_shape(eng.bundle.init, jax.random.PRNGKey(0))
+    return {k: tuple(v.shape) for k, v in flatten(p0).items()}
+
+
+def _compiled_costs(eng, shape, *, local: bool = True):
+    """(flops, bytes) of the local step and/or consensus executables via
+    AOT lower+compile from shape structs (no concrete state)."""
+    from jax.sharding import NamedSharding
+    state = eng.state_struct()
+    kw = dict(model=eng.axes.get("model", 1),
+              data=eng.axes.get("data", 1),
+              node=eng.consensus.node_size)
+    out = {}
+    if local:
+        bshapes = eng.bundle.train_inputs(shape, eng.workers)
+        bsh = eng.batch_sharding(bshapes)
+        batch = {k: jax.ShapeDtypeStruct(tuple(v.shape), v.dtype,
+                                         sharding=bsh[k])
+                 for k, v in bshapes.items()}
+        eta = jax.ShapeDtypeStruct((), jnp.float32)
+        txt = eng.local_step_fn().lower(state, batch, eta) \
+            .compile().as_text()
+        wc = weighted_cost(txt, **kw)
+        out["local"] = (wc.flops, wc.bytes)
+    txt = eng.consensus_step_fn(False).lower(state).compile().as_text()
+    wc = weighted_cost(txt, **kw)
+    out["cons"] = (wc.flops, wc.bytes)
+    return out
+
+
+def _identity_frozen_masks(eng) -> dict:
+    """A frozen full-shape mask state with the first-B groups kept —
+    shapes are all reconfigure() needs to build the shrunk engine."""
+    from ..core.hsadmm import identity_mask_state
+    shapes = _param_shapes(eng)
+    masks = {}
+    for r in eng.bundle.plan.rules:
+        stack = shapes[r.leaves[0].key][:r.stack_ndims]
+        masks[r.name] = identity_mask_state(r, stack,
+                                            eng.spec.budgets[r.name])
+    return masks
+
+
+def _phase_cost(eng, shape, costs: dict) -> PhaseCost:
+    shapes = _param_shapes(eng)
+    compact = plan_payload_shapes(shapes, eng.bundle.plan,
+                                  eng.spec.budgets)
+    return PhaseCost(
+        local_flops=costs["local"][0], local_bytes=costs["local"][1],
+        cons_flops=costs["cons"][0], cons_bytes=costs["cons"][1],
+        param_shapes=shapes, compact_shapes=compact,
+        mask_bytes=mask_sync_bytes(shapes, eng.bundle.plan,
+                                   eng.cfg.hsadmm.mask_mode))
+
+
+def build_tables(space: TuneSpace, shape, *, log=None) -> dict:
+    """One :class:`CandidateTable` per (topology, W, keep) cell of the
+    space.  Compile budget: LOCAL step once per (topology, W) — its
+    executable doesn't depend on the keep budget — consensus and the
+    shrunk phase once per (topology, W, keep)."""
+    tables: dict = {}
+    local_cache: dict = {}
+    for topo in space.topologies:
+        for W in space.workers:
+            for keep in space.keeps:
+                cand0 = Candidate(arch=space.arch, smoke=space.smoke,
+                                  topology=topo, workers=W,
+                                  node_size=space.node_size, keep=keep,
+                                  local_steps=1, wire_map=(),
+                                  reconfig_round=None)
+                eng = engine_for(cand0, shape)
+                need_local = (topo, W) not in local_cache
+                costs = _compiled_costs(eng, shape, local=need_local)
+                if need_local:
+                    local_cache[(topo, W)] = costs["local"]
+                costs["local"] = local_cache[(topo, W)]
+                full = _phase_cost(eng, shape, costs)
+                eng2, _ = eng.reconfigure(
+                    masks=_identity_frozen_masks(eng))
+                costs2 = _compiled_costs(eng2, shape, local=True)
+                shr = _phase_cost(eng2, shape, costs2)
+                # the shrunk phase is always frozen: no mask agreement
+                shr = PhaseCost(**{**shr.__dict__, "mask_bytes": 0})
+                tables[(topo, W, keep)] = CandidateTable(
+                    topology=topo, workers=W, node_size=space.node_size,
+                    levels=tuple(eng.consensus.levels),
+                    compact_from_level=eng.consensus.compact_from_level,
+                    t_freeze=eng.cfg.hsadmm.t_freeze,
+                    param_dtype=eng.cfg.param_dtype, keep=keep,
+                    full=full, shrunk=shr)
+                if log:
+                    log(f"[tune:stage1] table {topo} W={W} keep={keep:g}"
+                        f" levels={eng.consensus.levels}")
+    return tables

@@ -1,0 +1,233 @@
+"""Stage 2: short measured runs over the stage-1 survivors.
+
+Stage 1 ranks by an analytic model; stage 2 keeps it honest the way
+``benchmarks/run.py`` does — interleaved paired-delta timing of REAL
+fused-round dispatches:
+
+  * every surviving cell builds its engine through the same
+    ``tune.space.engine_for`` path a launch would, applies the
+    candidate's wire map (``Engine.with_wire``), and times the actual
+    donated round executable on a real superbatch;
+  * timed rounds are interleaved across cells (cell A round 1, cell B
+    round 1, cell A round 2, ...) so slow drift hits all cells equally,
+    and each non-base cell is scored as base-median + median of its
+    paired per-round deltas;
+  * the whole timed region runs under ``dist.monitor.compile_count`` —
+    steady-state compiles must be ZERO (the fused-round invariant); a
+    nonzero count means we timed XLA, and ``validate`` reports it so
+    callers can discard the measurement.
+
+Measured rounds run DYNAMIC and at full shapes (``t_freeze`` pushed out
+of reach) so every cell times the same phase and candidates differing
+only in ``reconfig_round`` share one measurement.
+
+``fit_priors`` closes the CGX-style feedback loop (satellite 3): probe
+the winner's consensus under the dense codec vs its compact codec —
+same hierarchy, same state shapes modulo wire buffers, payload bytes
+the only first-order difference — and least-squares the (bytes,
+seconds) pairs through ``dist.fabric.fit_bandwidth`` into a measured
+inter-node GB/s for :class:`repro.dist.fabric.SelectorPriors`.  When
+the fit fails (single-host runs can time codec compute, not wire — the
+slope goes negative) the priors stay analytic and say so.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..comm.select import AdaptiveWireSelector, WireSelection
+from ..core.consensus import consensus_step
+from ..data.pipeline import batches, superbatches
+from ..data.synthetic import make_stream
+from ..dist import monitor
+from ..dist.fabric import WIRE_PRIORS, SelectorPriors, fit_bandwidth
+from ..train.loop import round_comm_bytes
+from .cost import Estimate
+from .space import Candidate, engine_for
+
+#: measured rounds never freeze: every timed dispatch is the dynamic
+#: executable, so cells are phase-comparable
+_NEVER_FREEZE = 10_000
+
+
+def measurement_key(c: Candidate) -> tuple:
+    """Candidates differing only in reconfig_round time identically."""
+    return (c.topology, c.workers, c.keep, c.local_steps, c.wire_map)
+
+
+@dataclass
+class MeasuredCell:
+    """One stage-2 cell: a (topology, W, keep, E, wire_map) point."""
+
+    candidate: Candidate            # representative (reconfig collapsed)
+    est_time_s: float               # stage-1 estimate for the rep
+    wall_s: float                   # measured seconds per fused round
+    delta_s: float                  # paired delta vs the base cell
+    bytes_per_round: int            # analytic dynamic inter-node payload
+    rounds: int
+    compiles: int                   # compiles during THIS cell's warmup
+
+    def to_row(self) -> dict:
+        return {"name": self.candidate.name,
+                "topology": self.candidate.topology,
+                "wire_map": list(self.candidate.wire_map),
+                "est_time_s": self.est_time_s,
+                "measured_round_s": self.wall_s,
+                "paired_delta_s": self.delta_s,
+                "bytes_per_round": self.bytes_per_round,
+                "rounds": self.rounds}
+
+
+@dataclass
+class ValidateResult:
+    cells: list = field(default_factory=list)     # [MeasuredCell]
+    steady_compiles: int = 0                      # MUST be 0
+    total_s: float = 0.0
+
+    def best(self, topology: Optional[str] = None
+             ) -> Optional[MeasuredCell]:
+        cs = [c for c in self.cells
+              if topology is None or c.candidate.topology == topology]
+        return min(cs, key=lambda c: (c.wall_s, c.candidate.name)) \
+            if cs else None
+
+
+def _cell_setup(cand: Candidate, shape, seed: int):
+    """(engine, round_fn, state, superbatch, compiles) for one cell."""
+    with monitor.compile_count() as stats:
+        eng = engine_for(cand, shape, t_freeze=_NEVER_FREEZE)
+        eng = eng.with_wire(None, None, cand.wire_map)
+        fn = eng.round_step_fn(frozen=False)
+        state = eng.init_state_fn()(jax.random.PRNGKey(seed))
+        E = max(cand.local_steps, 1)
+        it = superbatches(
+            batches(make_stream(eng.cfg, shape, eng.workers),
+                    eng.bundle.extra_inputs, shape), E)
+        sb = next(it)
+        # warmup dispatch: pays the compile, leaves a live donated state
+        state, m = fn(state, sb, jnp.float32(1e-3))
+        jax.block_until_ready(m)
+    return eng, fn, state, sb, stats.compiles
+
+
+def validate(ests: list, shape, *, topk: int = 4, rounds: int = 4,
+             seed: int = 0, log=None) -> ValidateResult:
+    """Measure the top-``topk`` stage-1 estimates (deduped by
+    :func:`measurement_key`) for ``rounds`` interleaved fused rounds
+    each.  ``ests`` is the stage-1 ranking (cheapest first)."""
+    picked: list[Estimate] = []
+    seen = set()
+    for e in ests:
+        k = measurement_key(e.candidate)
+        if k in seen:
+            continue
+        seen.add(k)
+        picked.append(e)
+        if len(picked) >= topk:
+            break
+
+    t0 = time.time()
+    cells = []
+    for e in picked:
+        eng, fn, state, sb, compiles = _cell_setup(e.candidate, shape,
+                                                   seed)
+        cells.append({"est": e, "eng": eng, "fn": fn, "state": state,
+                      "sb": sb, "compiles": compiles, "ts": []})
+        if log:
+            log(f"[tune:stage2] cell {e.candidate.name} ready "
+                f"({compiles} warmup compiles)")
+
+    eta = jnp.float32(1e-3)
+    with monitor.compile_count() as steady:
+        for _ in range(max(rounds, 1)):
+            for c in cells:
+                t = time.perf_counter()
+                c["state"], m = c["fn"](c["state"], c["sb"], eta)
+                jax.block_until_ready(m)
+                c["ts"].append(time.perf_counter() - t)
+
+    res = ValidateResult(steady_compiles=steady.compiles)
+    if not cells:
+        return res
+    base = np.asarray(cells[0]["ts"])
+    base_med = float(np.median(base))
+    for i, c in enumerate(cells):
+        ts = np.asarray(c["ts"])
+        delta = 0.0 if i == 0 else float(np.median(ts - base))
+        wall = base_med if i == 0 else base_med + delta
+        res.cells.append(MeasuredCell(
+            candidate=c["est"].candidate, est_time_s=c["est"].time_s,
+            wall_s=wall, delta_s=delta,
+            bytes_per_round=round_comm_bytes(c["eng"])[1],
+            rounds=len(ts), compiles=c["compiles"]))
+        if log:
+            log(f"[tune:stage2] {c['est'].candidate.name}: "
+                f"{wall * 1e3:.2f}ms/round (delta {delta * 1e3:+.2f}ms)")
+    res.total_s = time.time() - t0
+    if log and res.steady_compiles:
+        log(f"[tune:stage2] WARNING: {res.steady_compiles} steady-state "
+            "compiles — timed XLA, not the computation")
+    return res
+
+
+# --------------------------------------------------------------------- #
+# measured-bandwidth feedback into the selector priors (satellite 3)
+# --------------------------------------------------------------------- #
+
+
+def _consensus_probe(cand: Candidate, wire_map: tuple, shape, seed: int
+                     ) -> tuple[int, float]:
+    """(dynamic inter-node payload bytes, median consensus seconds) of
+    the candidate's hierarchy under ``wire_map`` — a NON-donated jit so
+    the probe can redispatch on one state."""
+    eng = engine_for(cand, shape, t_freeze=_NEVER_FREEZE)
+    eng = eng.with_wire(None, None, wire_map)
+    state = eng.init_state_fn()(jax.random.PRNGKey(seed))
+    spec = eng.spec
+    fn = jax.jit(lambda st: consensus_step(st, spec, frozen=False))
+    sec, _ = monitor.probe_seconds(fn, state, reps=3, warmup=1)
+    return round_comm_bytes(eng)[1], sec
+
+
+def fit_priors(cand: Candidate, shape, *, seed: int = 0, log=None
+               ) -> SelectorPriors:
+    """Measured :class:`SelectorPriors` from two consensus probes of the
+    winning candidate — its own wire map vs the all-dense map.  Falls
+    back to the analytic ``WIRE_PRIORS`` (source stays ``"prior"``) when
+    the two payloads coincide or the fitted slope is unusable."""
+    base = SelectorPriors.from_profile(WIRE_PRIORS)
+    dense_map = ("dense",) * len(cand.wire_map)
+    # second probe point: the winner's own map when it differs from
+    # all-dense, else a compact+q8 top boundary — the fit needs two
+    # distinct payload sizes
+    alt_map = tuple(cand.wire_map) if tuple(cand.wire_map) != dense_map \
+        else dense_map[:-1] + ("compact+q8",)
+    pairs = [_consensus_probe(cand, dense_map, shape, seed),
+             _consensus_probe(cand, alt_map, shape, seed)]
+    bw = fit_bandwidth([b for b, _ in pairs], [s for _, s in pairs])
+    if bw is None:
+        if log:
+            log("[tune:priors] bandwidth fit unusable "
+                f"(pairs={[(b, round(s * 1e3, 3)) for b, s in pairs]}); "
+                "keeping analytic priors")
+        return base
+    fitted = base.with_measured_inter(bw)
+    if log:
+        log(f"[tune:priors] measured inter-node bandwidth "
+            f"{bw / 1e9:.3f} GB/s from {len(pairs)} consensus probes")
+    return fitted
+
+
+def reselect(cand: Candidate, shape, priors: SelectorPriors, *,
+             seed: int = 0) -> WireSelection:
+    """Re-run the adaptive selector on the winner's engine under the
+    (possibly measured) priors — the full CGX loop: measure, refit,
+    reselect."""
+    eng = engine_for(cand, shape, t_freeze=_NEVER_FREEZE)
+    sel = AdaptiveWireSelector(probe_reps=1, priors=priors)
+    return sel.select(eng)

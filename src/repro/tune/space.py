@@ -1,0 +1,149 @@
+"""The tuner's candidate space: (keep, codec, E, W, reconfig, topology).
+
+A :class:`Candidate` is one fully-specified point of the joint space the
+paper tunes by hand — a keep budget, a per-boundary wire map, E local
+steps, a worker count on a named consensus topology, and an optional
+reconfiguration round.  :class:`TuneSpace` is the grid; ``enumerate``
+yields every candidate, deterministically ordered (the stage-1 sweep is
+a pure function of the space and the cost tables, so candidate ranking
+is replayable).
+
+``consensus_for``/``engine_for`` are the one mapping from a candidate's
+(topology, W, node_size) to a launchable :class:`repro.train.engine.
+Engine` — the tuner's dry-run pricing, its stage-2 measured runs, and
+``launch/train.py --from-json`` all build engines through here, so a
+priced configuration is by construction the same thing that launches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+TOPOLOGIES = ("chip", "pod", "flat")
+
+#: default intra-node codec while the grid explores the top boundary
+#: (the slow fabric is where codec choice moves wall time; stage-2 can
+#: still re-select intra boundaries via the AdaptiveWireSelector)
+INTRA_DEFAULT = "dense"
+
+
+def consensus_for(topology: str, workers: int, node_size: int = 2):
+    """ConsensusSpec of one named topology (mirrors launch/train and the
+    fused-round test matrix):
+
+      chip  hierarchical, compact from the node->global boundary,
+      pod   compact from the very first boundary (pod-granular workers),
+      flat  the PruneX(AR) ablation: one global boundary, honestly dense
+            unless the candidate's codec carries the compact marker.
+    """
+    from ..configs.base import ConsensusSpec
+    if topology in ("chip", "pod"):
+        ns = max(1, min(node_size, workers))
+        rest = workers // ns
+        levels = (ns, rest) if rest > 1 else (ns, 1)
+        return ConsensusSpec(levels=levels,
+                             compact_from_level=1 if topology == "chip"
+                             else 0,
+                             granularity=topology, node_size=ns)
+    if topology == "flat":
+        return ConsensusSpec(levels=(workers,), compact_from_level=1,
+                             granularity="flat")
+    raise ValueError(f"unknown topology {topology!r}; "
+                     f"known: {TOPOLOGIES}")
+
+
+def num_boundaries(topology: str, workers: int, node_size: int = 2) -> int:
+    return len(consensus_for(topology, workers, node_size).levels)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the (keep, codec, E, W, reconfig, topology) space."""
+
+    arch: str
+    smoke: bool
+    topology: str
+    workers: int
+    node_size: int
+    keep: float
+    local_steps: int                       # E
+    wire_map: tuple                        # one spec per level boundary
+    reconfig_round: Optional[int] = None   # outer round of the retrace
+
+    @property
+    def name(self) -> str:
+        rc = "never" if self.reconfig_round is None \
+            else f"r{self.reconfig_round}"
+        return (f"{self.topology}-W{self.workers}-keep{self.keep:g}"
+                f"-E{self.local_steps}-{'+'.join(self.wire_map)}-{rc}")
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["wire_map"] = list(self.wire_map)
+        d["name"] = self.name
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "Candidate":
+        d = {k: v for k, v in d.items() if k != "name"}
+        d["wire_map"] = tuple(d["wire_map"])
+        return Candidate(**d)
+
+
+@dataclass(frozen=True)
+class TuneSpace:
+    """The candidate grid.  ``codecs`` are TOP-boundary specs (the slow
+    fabric); intra boundaries take ``intra`` while stage 1 sweeps — the
+    cross product with per-intra-boundary codecs is deliberately skipped
+    (DESIGN.md), the selector handles it from measurements."""
+
+    arch: str = "resnet18"
+    smoke: bool = False
+    topologies: tuple = TOPOLOGIES
+    workers: tuple = (4,)
+    node_size: int = 2
+    keeps: tuple = (0.25, 0.5)
+    local_steps: tuple = (2, 4, 8)
+    codecs: tuple = ("dense", "compact+q8", "compact+q4")
+    reconfig_rounds: tuple = (None, 12)
+    intra: str = INTRA_DEFAULT
+
+    def enumerate(self) -> Iterator[Candidate]:
+        for topo in self.topologies:
+            for W in self.workers:
+                K = num_boundaries(topo, W, self.node_size)
+                for keep in self.keeps:
+                    for E in self.local_steps:
+                        for codec in self.codecs:
+                            wm = (self.intra,) * (K - 1) + (codec,)
+                            for r in self.reconfig_rounds:
+                                yield Candidate(
+                                    arch=self.arch, smoke=self.smoke,
+                                    topology=topo, workers=W,
+                                    node_size=self.node_size, keep=keep,
+                                    local_steps=E, wire_map=wm,
+                                    reconfig_round=r)
+
+    def size(self) -> int:
+        return sum(1 for _ in self.enumerate())
+
+
+def engine_for(cand: Candidate, shape, *, t_freeze: Optional[int] = None):
+    """A launchable Engine for one candidate on the host mesh.  The
+    candidate's keep/E land in HsadmmConfig; the wire map rides
+    RunConfig (the loop rebuilds the engine spec around it), so the
+    returned engine's codecs are the config defaults until then."""
+    from ..configs import get_config
+    from ..launch.mesh import make_host_mesh
+    from ..models import build
+    from ..train.engine import Engine
+    cfg = get_config(cand.arch, smoke=cand.smoke)
+    hp = dataclasses.replace(cfg.hsadmm, keep_rate=cand.keep,
+                             local_steps=cand.local_steps)
+    if t_freeze is not None:
+        hp = dataclasses.replace(hp, t_freeze=t_freeze)
+    cfg = cfg.replace(hsadmm=hp)
+    return Engine(build(cfg), make_host_mesh(), shape,
+                  consensus=consensus_for(cand.topology, cand.workers,
+                                          cand.node_size))

@@ -1,0 +1,243 @@
+"""repro.tune: the auto-tuner's stage-1 analytic sweep (deterministic
+ranking, reconfig phase-split arithmetic), RunConfig JSON round-trips,
+the measured stage-2 smoke (zero steady-state recompiles), and the
+acceptance loop — an emitted winner spec launches a real smoke round
+through ``RunConfig.from_json``."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.dist import ft
+from repro.dist.fabric import TPU_V5E, get_profile
+from repro.train.loop import RunConfig, train
+from repro.tune import artifacts as art
+from repro.tune import measure as ms
+from repro.tune.cost import (CandidateTable, ConvergenceModel, PhaseCost,
+                             build_tables, price, sweep)
+from repro.tune.space import Candidate, TuneSpace
+
+SHAPE = ShapeConfig("tiny", "train", 32, 8)
+
+
+# --------------------------------------------------------------------- #
+# stage 1 on a hand-built fixed cost table: no compiles, fully
+# deterministic
+# --------------------------------------------------------------------- #
+
+def _fixed_table(t_freeze=4) -> CandidateTable:
+    full = PhaseCost(local_flops=1e9, local_bytes=4e6,
+                     cons_flops=2e8, cons_bytes=1e6,
+                     param_shapes={"w": (64, 64), "b": (64,)},
+                     compact_shapes={"w": (32, 64), "b": (32,)},
+                     mask_bytes=4096)
+    shrunk = PhaseCost(local_flops=3e8, local_bytes=1.2e6,
+                       cons_flops=6e7, cons_bytes=3e5,
+                       param_shapes={"w": (32, 64), "b": (32,)},
+                       compact_shapes={"w": (32, 64), "b": (32,)},
+                       mask_bytes=0)
+    return CandidateTable(topology="chip", workers=4, node_size=2,
+                          levels=(2, 2), compact_from_level=1,
+                          t_freeze=t_freeze, param_dtype="float32",
+                          keep=0.5, full=full, shrunk=shrunk)
+
+
+FIXED_SPACE = TuneSpace(arch="resnet18", smoke=True, topologies=("chip",),
+                        workers=(4,), keeps=(0.5,), local_steps=(2, 4),
+                        codecs=("dense", "compact+q8"),
+                        reconfig_rounds=(None, 12))
+
+
+def test_sweep_ranking_deterministic():
+    tables = {("chip", 4, 0.5): _fixed_table()}
+    r1 = sweep(FIXED_SPACE, tables, TPU_V5E, ConvergenceModel(128))
+    r2 = sweep(FIXED_SPACE, tables, TPU_V5E, ConvergenceModel(128))
+    assert [e.candidate.name for e in r1] \
+        == [e.candidate.name for e in r2]
+    assert len(r1) == FIXED_SPACE.size() == 8
+    # sorted by estimated time, name-tiebroken
+    times = [e.time_s for e in r1]
+    assert times == sorted(times)
+    # with a cheaper shrunk phase, every reconfig candidate must beat its
+    # never-reconfig twin
+    by_name = {e.candidate.name: e for e in r1}
+    for e in r1:
+        c = e.candidate
+        if c.reconfig_round is not None:
+            twin = by_name[dataclasses.replace(
+                c, reconfig_round=None).name]
+            assert e.time_s < twin.time_s
+
+
+def test_reconfig_phase_split():
+    table = _fixed_table(t_freeze=4)
+    conv = ConvergenceModel(128)
+
+    def cand(r):
+        return Candidate(arch="resnet18", smoke=True, topology="chip",
+                         workers=4, node_size=2, keep=0.5, local_steps=4,
+                         wire_map=("dense", "compact+q8"),
+                         reconfig_round=r)
+
+    never = price(cand(None), table, TPU_V5E, conv)
+    assert never.rounds_shrunk == 0
+    assert never.rounds_full == never.rounds_total
+    assert never.rounds_dynamic == table.t_freeze
+    # r beyond the horizon: identical to never reconfiguring
+    late = price(cand(never.rounds_total + 5), table, TPU_V5E, conv)
+    assert late.rounds_shrunk == 0 and late.time_s == never.time_s
+    # r below the freeze point clamps to t_freeze + 1
+    early = price(cand(1), table, TPU_V5E, conv)
+    assert early.rounds_full == table.t_freeze + 1
+    # mid-run reconfig: phases priced separately, and moving the point by
+    # d rounds moves the estimate by exactly d * (full - shrunk) round
+    # cost (both points past the dynamic prefix)
+    a = price(cand(10), table, TPU_V5E, conv)
+    b = price(cand(14), table, TPU_V5E, conv)
+    assert a.rounds_full == 10 and b.rounds_full == 14
+    assert a.rounds_full + a.rounds_shrunk == a.rounds_total
+    d = (b.rounds_full - a.rounds_full)
+    expect = d * (a.full_terms["round_s"]
+                  - a.shrunk_terms["round_s"])
+    assert b.time_s - a.time_s == pytest.approx(expect, rel=1e-9)
+    # the shrunk phase must actually be cheaper here
+    assert a.shrunk_terms["round_s"] < a.full_terms["round_s"]
+    assert a.time_s < never.time_s
+
+
+def test_wire_map_length_checked():
+    table = _fixed_table()
+    bad = Candidate(arch="resnet18", smoke=True, topology="chip",
+                    workers=4, node_size=2, keep=0.5, local_steps=2,
+                    wire_map=("dense",), reconfig_round=None)
+    with pytest.raises(ValueError):
+        price(bad, table, TPU_V5E, ConvergenceModel(64))
+
+
+# --------------------------------------------------------------------- #
+# serialization round-trips
+# --------------------------------------------------------------------- #
+
+def test_runconfig_json_roundtrip_bitstable():
+    run = RunConfig(outer_iters=17, shape=SHAPE, eta=3e-4, seed=7,
+                    metrics_every=2, ckpt_dir="/tmp/x", ckpt_every=5,
+                    ft_policy=ft.compose(ft.fail_window({0: (2, 4)}),
+                                         ft.straggler_decay({3: 0.25},
+                                                            halflife=8)),
+                    wire_map=("dense", "compact+q8"),
+                    reconfig=True, reconfig_patience=3)
+    j = run.to_json()
+    # JSON-clean (survives a dump/load cycle untouched)
+    assert json.loads(json.dumps(j)) == j
+    run2 = RunConfig.from_json(j)
+    # bit-stable: re-serializing reproduces the dict exactly
+    assert run2.to_json() == j
+    assert run2.wire_map == ("dense", "compact+q8")
+    assert run2.shape == SHAPE
+    assert run2.reconfig and run2.reconfig_patience == 3
+    # the policy reconstructs to identical weight vectors
+    for k in range(10):
+        np.testing.assert_array_equal(run.ft_policy(k, 4),
+                                      run2.ft_policy(k, 4))
+
+
+def test_runconfig_json_rejects_unknown_keys():
+    j = RunConfig(outer_iters=1, shape=SHAPE).to_json()
+    j["not_a_field"] = 1
+    with pytest.raises(ValueError, match="unknown RunConfig JSON keys"):
+        RunConfig.from_json(j)
+
+
+def test_runconfig_json_rejects_opaque_policy():
+    run = RunConfig(outer_iters=1, shape=SHAPE,
+                    ft_policy=lambda k, W: np.ones((W,), np.float32))
+    with pytest.raises(ValueError, match="not serializable"):
+        run.to_json()
+
+
+def test_ft_from_spec_roundtrip():
+    p = ft.compose(ft.fail_window({1: (3, 6)}),
+                   ft.straggler_decay({2: 0.5}, halflife=4))
+    q = ft.from_spec(p.spec)
+    assert q.spec == p.spec
+    for k in range(8):
+        np.testing.assert_array_equal(p(k, 4), q(k, 4))
+    with pytest.raises(ValueError):
+        ft.from_spec("no_such_policy:{}")
+
+
+def test_candidate_json_roundtrip():
+    c = Candidate(arch="resnet18", smoke=True, topology="flat", workers=4,
+                  node_size=2, keep=0.25, local_steps=8,
+                  wire_map=("compact+q4",), reconfig_round=12)
+    assert Candidate.from_json(c.to_json()) == c
+    assert Candidate.from_json(json.loads(json.dumps(c.to_json()))) == c
+
+
+# --------------------------------------------------------------------- #
+# measured stage 2 + the acceptance loop (smoke arch, real engines)
+# --------------------------------------------------------------------- #
+
+QUICK_SPACE = TuneSpace(arch="resnet18", smoke=True, topologies=("flat",),
+                        workers=(4,), keeps=(0.5,), local_steps=(2,),
+                        codecs=("dense", "compact+q8"),
+                        reconfig_rounds=(None,))
+
+
+@pytest.fixture(scope="module")
+def quick_stage1():
+    tables = build_tables(QUICK_SPACE, SHAPE)
+    ests = sweep(QUICK_SPACE, tables, get_profile("tpu_v5e"),
+                 ConvergenceModel(target_steps=64))
+    return tables, ests
+
+
+def test_stage2_zero_steady_recompiles(quick_stage1):
+    _, ests = quick_stage1
+    res = ms.validate(ests, SHAPE, topk=2, rounds=2)
+    assert len(res.cells) == 2
+    # the fused-round invariant holds through the tuner's timed region:
+    # warmup pays every compile, steady-state pays none
+    assert res.steady_compiles == 0
+    for cell in res.cells:
+        assert cell.wall_s > 0.0
+        assert cell.rounds == 2
+        assert cell.bytes_per_round > 0
+    assert res.best("flat") is not None
+
+
+def test_winner_roundtrips_into_launchable_train(quick_stage1, tmp_path):
+    tables, ests = quick_stage1
+    est = ests[0]
+    cand = est.candidate
+    table = tables[(cand.topology, cand.workers, cand.keep)]
+    run = art.winner_run_config(cand, est, SHAPE, table.t_freeze)
+    assert run.outer_iters == est.rounds_total
+    assert run.wire_map == cand.wire_map
+    path = art.emit_winner(str(tmp_path / "winner.json"), cand, est, run)
+    # the acceptance loop: reload through the SAME loader --from-json
+    # uses and run one real smoke round
+    eng, run2, cand2 = art.load_winner(path)
+    assert cand2 == cand
+    assert run2.to_json() == run.to_json()
+    smoke = dataclasses.replace(run2, outer_iters=1, log=None,
+                                ckpt_dir=None)
+    state, rep = train(eng, smoke)
+    assert len(rep.losses) == 1
+    assert np.isfinite(rep.losses[0])
+
+
+def test_fig8_artifact_is_real():
+    """The committed fig8_breakdown.json must be the tuner-generated
+    decomposition, not the historical {"skipped": ...} stub."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "experiments", "bench", "fig8_breakdown.json")
+    with open(path) as f:
+        d = json.load(f)
+    assert "skipped" not in d
+    assert d.get("rows"), "fig8 has no candidate rows"
+    frac = d["fraction"]
+    assert frac and abs(sum(frac.values()) - 1.0) < 1e-6

@@ -80,6 +80,16 @@ class HsadmmConfig:
     # consecutive frozen-mask rounds to wait before the one-time retrace
     # of the round executable onto the budget-B architecture.
     reconfig_patience: int = 2
+    # Overlapped-round depth (paper's leader-follower motivation, async
+    # ADMM relaxation):
+    #   0 = sequential round: E prox-SGD steps, then the hierarchical
+    #       reduce over the fresh iterates (bit-identical to the
+    #       pre-overlap code path);
+    #   1 = round r's consensus reduce is issued over round r-1's
+    #       iterates while round r's local scan runs on one-round-stale
+    #       z/u — both read the same input state, so XLA overlaps the
+    #       inter-node collectives with the local compute.
+    staleness: int = 0
     # DEPRECATED (one-release shim): legacy wire format of the top-level
     # exchange; "int8"/"q8" maps to wire_inter="q8".  Use wire_inter.
     comm_quant: Optional[str] = None

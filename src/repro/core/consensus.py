@@ -111,27 +111,81 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
     wire_new = list(wire_old) if wire_old is not None \
         else [{} for _ in codecs]
 
-    def wire_reduce(tree: dict, k: int, g: int, w: jnp.ndarray) -> dict:
-        """Boundary-k weighted group exchange in that codec's format."""
-        codec = codecs[k - 1]
-        cst = wire_old[k - 1] if codec.stateful and wire_old is not None \
-            else None
-        red, cst = codec.group_reduce(tree, g, w, cst)
-        if codec.stateful:
-            wire_new[k - 1] = cst
-        return red
-
     theta, u = state["theta"], state["u"]
     w = state["weights"]
     rho = state["rho"]
     zs_old = state["z"]
     vs_old = state["v"]
 
+    def wk_chain(wvec: jnp.ndarray) -> list:
+        """Cumulative weights per level: chain[k] has shape (M_k,)."""
+        out = [wvec]
+        for g in levels:
+            out.append(group_sum(out[-1], g))
+        return out
+
     # cumulative weights per level: wk[k] has shape (M_k,)
-    wk = [w]
-    for g in levels:
-        wk.append(group_sum(wk[-1], g))
+    wk = wk_chain(w)
     M1 = spec.consensus.num_workers // levels[0]
+
+    # per-coupling-class straggler weights (spec.class_weights): every
+    # leaf's exchange is led by ONE class — the first plan rule touching
+    # it (leaves coupled to several classes ride their lead class);
+    # unruled leaves keep the global weights.  Each class multiplies its
+    # (W,) weight vector into the global one, so all-ones class weights
+    # are bit-identical to the unscoped path.
+    cw = state.get("class_weights") if spec.class_weights else None
+    key_class: dict = {}
+    wk_by_class: dict = {}
+    if cw is not None:
+        for rule in plan.rules:
+            for la in rule.all_leaves:
+                key_class.setdefault(la.key, rule.name)
+        wk_by_class = {name: wk_chain(w * cwv) for name, cwv in cw.items()}
+
+    def wk_for(key: str) -> list:
+        return wk_by_class.get(key_class.get(key), wk) if cw is not None \
+            else wk
+
+    def wire_reduce(tree: dict, k: int, g: int, lvl: int) -> dict:
+        """Boundary-k weighted group exchange in that codec's format,
+        weighted by the level-``lvl`` cumulative weights."""
+        codec = codecs[k - 1]
+        cst = wire_old[k - 1] if codec.stateful and wire_old is not None \
+            else None
+        if cw is None:
+            red, cst = codec.group_reduce(tree, g, wk[lvl], cst)
+            if codec.stateful:
+                wire_new[k - 1] = cst
+            return red
+        # Partition the payload by lead coupling class: each class's
+        # group_reduce is a SEPARATE collective carrying that class's
+        # own weights, so XLA can ship early classes while later ones
+        # still compute, and a straggler policy scoping a worker to one
+        # class discounts only that class's payload.  The codec EF state
+        # is partitioned by the same keys and merged back, so top-k
+        # error feedback threads per leaf exactly as in the joint call.
+        flat = {key: get_leaf(tree, key) for key in leaf_keys(tree)}
+        cst_flat = {key: get_leaf(cst, key) for key in leaf_keys(cst)} \
+            if cst is not None else None
+        parts: dict = {}
+        for key in flat:
+            parts.setdefault(key_class.get(key), []).append(key)
+        out_flat, new_cst_flat = {}, {}
+        for cls in sorted(parts, key=lambda c: (c is None, c or "")):
+            keys = parts[cls]
+            sub = unflatten({kk: flat[kk] for kk in keys})
+            sub_cst = unflatten({kk: cst_flat[kk] for kk in keys}) \
+                if cst_flat is not None else None
+            red, sc = codec.group_reduce(
+                sub, g, wk_by_class.get(cls, wk)[lvl], sub_cst)
+            for kk in keys:
+                out_flat[kk] = get_leaf(red, kk)
+                if codec.stateful:
+                    new_cst_flat[kk] = get_leaf(sc, kk)
+        if codec.stateful:
+            wire_new[k - 1] = unflatten(new_cst_flat)
+        return unflatten(out_flat)
 
     payload0 = jax.tree.map(lambda t, uu: t + uu, theta, u)
 
@@ -142,7 +196,8 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
             b = get_leaf(buf_tree, key)
             sn = spec.stack_ndims(key)
             r1 = bcast_rho(get_leaf(rho[0], key), b, sn, 1)
-            wsum = wk[1].reshape((-1,) + (1,) * (b.ndim - 1)).astype(b.dtype)
+            wsum = wk_for(key)[1].reshape(
+                (-1,) + (1,) * (b.ndim - 1)).astype(b.dtype)
             num = r1 * b
             den = r1 * wsum + hp.weight_decay / max(M1, 1)
             if K > 1:
@@ -163,12 +218,12 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
         new_masks, idxs, minfo = _make_masks(state, spec, payload0, frozen)
         info.update(minfo)
         pc = compact_params(payload0, plan, idxs, offset=1)
-        buf = wire_reduce(pc, 1, levels[0], w)   # compact collective
+        buf = wire_reduce(pc, 1, levels[0], 0)   # compact collective
         z2v_c = compact_params(z2v, plan, idxs, offset=1) if K > 1 else None
         z1c = cand1(buf, z2v_c)
         z1 = expand_params(z1c, plan, idxs, fulls, offset=1)  # recovery
     else:
-        buf = wire_reduce(payload0, 1, levels[0], w)  # dense intra AllReduce
+        buf = wire_reduce(payload0, 1, levels[0], 0)  # dense intra AllReduce
         z1t = cand1(buf, z2v)
         new_masks, idxs, minfo = _make_masks(state, spec, z1t, frozen)
         info.update(minfo)
@@ -192,13 +247,14 @@ def consensus_step(state: dict, spec: EngineSpec, frozen: bool = False,
             payload = compact_params(payload, plan, idxs, offset=1)
             if zkv is not None:
                 zkv = compact_params(zkv, plan, idxs, offset=1)
-        red = wire_reduce(payload, k, g, wk[k - 1])  # level-k collective
+        red = wire_reduce(payload, k, g, k - 1)  # level-k collective
 
         out = {}
         for key in leaf_keys(red):
             b = get_leaf(red, key)
             sn = spec.stack_ndims(key)
-            wsum = wk[k].reshape((-1,) + (1,) * (b.ndim - 1)).astype(b.dtype)
+            wsum = wk_for(key)[k].reshape(
+                (-1,) + (1,) * (b.ndim - 1)).astype(b.dtype)
             if k == K:                           # Eq. 11: weighted mean
                 out[key] = (b / jnp.maximum(wsum, 1e-12)).astype(b.dtype)
             else:

@@ -48,6 +48,13 @@ class EngineSpec:
     stack_map: tuple[tuple[str, int], ...] = (("blocks", 1),)
     use_momentum: bool = True
     momentum: float = 0.9
+    # Per-coupling-class straggler weights (dist.ft class-scoped
+    # policies): adds a ``{rule: (W,)}`` weight tree to the state and
+    # partitions the wire reduce per coupling class, so a slow worker
+    # is discounted only on the classes it is late for — and the
+    # per-class collectives become independently schedulable, letting
+    # early classes' payloads ship while later classes still compute.
+    class_weights: bool = False
 
     @property
     def sync_cfg(self) -> MaskSyncConfig:
@@ -170,6 +177,12 @@ def init_state(params0: Params, spec: EngineSpec) -> dict:
         return state
     u = jax.tree.map(jnp.zeros_like, theta)
     state["u"] = u
+    if spec.class_weights:
+        # per-coupling-class contribution weights, multiplied into the
+        # global (W,) weights inside consensus_step; all-ones init means
+        # bit-identity with the unscoped path until a policy writes them
+        state["class_weights"] = {r.name: jnp.ones((W,), jnp.float32)
+                                  for r in spec.plan.rules}
 
     m = W
     zs = []
@@ -415,3 +428,63 @@ def round_step(state: dict, superbatch, loss_fn: Callable, spec: EngineSpec,
     state, losses = jax.lax.scan(body, state, superbatch)
     state, info = consensus_step(state, spec, frozen=frozen, detail=False)
     return state, round_metrics(state, info, losses, spec)
+
+
+def round_step_overlapped(state: dict, superbatch, loss_fn: Callable,
+                          spec: EngineSpec, eta, grad_accum: int = 1,
+                          frozen: bool = False
+                          ) -> tuple[dict, RoundMetrics]:
+    """One overlapped round: staleness-1 pipelining of :func:`round_step`.
+
+    The consensus (Phases 2-5, carrying the inter-node collectives) runs
+    over the state AS-IS — i.e. over the theta the *previous* round's
+    local scan produced — while this round's E prox-SGD steps scan over
+    the SAME input state, anchoring to the one-round-stale z/u (the
+    standard bounded-staleness async-ADMM relaxation).  The two programs
+    share only reads, so XLA is free to overlap the slow-fabric reduce
+    with the local compute; the outputs merge disjointly (theta/mom from
+    the scan, every consensus variable — z, v, u, rho, masks, wire EF
+    state, k — from the reduce).
+
+    The wire error-feedback state threads consensus->consensus exactly
+    as in the sequential round: each reduce encodes the theta snapshot
+    its EF state was accumulated against, so top-k feedback always sees
+    the buffer it actually encoded.
+
+    The returned state still carries ONE pending (un-reduced) theta;
+    :func:`flush_pipeline` drains it — required before a physical
+    reconfiguration migrates the state, since masks/budgets derived from
+    a stale consensus would migrate a buffer the shrunk plan never saw.
+    """
+    from .consensus import consensus_step
+    if spec.solo:
+        # no consensus variables exist; nothing to overlap
+        return round_step(state, superbatch, loss_fn, spec, eta,
+                          grad_accum=grad_accum, frozen=frozen)
+
+    def body(st, batch):
+        st, loss = local_step(st, batch, loss_fn, spec, eta,
+                              grad_accum=grad_accum)
+        return st, loss
+
+    new_cstate, info = consensus_step(state, spec, frozen=frozen,
+                                      detail=False)
+    scan_state, losses = jax.lax.scan(body, state, superbatch)
+    out = dict(new_cstate)
+    out["theta"] = scan_state["theta"]
+    if spec.use_momentum:
+        out["mom"] = scan_state["mom"]
+    return out, round_metrics(out, info, losses, spec)
+
+
+def flush_pipeline(state: dict, spec: EngineSpec, frozen: bool = False
+                   ) -> tuple[dict, RoundMetrics]:
+    """Drain the pending consensus of an overlapped pipeline: one
+    consensus-only step over the state as-is (no local scan).  After
+    this the state is exactly what a sequential round would have left —
+    safe to checkpoint as sequential, migrate through
+    ``Engine.reconfigure``, or hand to a staleness-0 engine."""
+    from .consensus import consensus_step
+    state, info = consensus_step(state, spec, frozen=frozen, detail=False)
+    return state, round_metrics(state, info,
+                                jnp.zeros((0,), jnp.float32), spec)

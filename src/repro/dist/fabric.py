@@ -83,15 +83,32 @@ def boundary_bw(profile: FabricProfile, k: int, K: int) -> float:
 
 
 def fit_bandwidth(bytes_: Sequence[float],
-                  seconds: Sequence[float]) -> Optional[float]:
+                  seconds: Sequence[float],
+                  compute_seconds: Optional[Sequence[float]] = None
+                  ) -> Optional[float]:
     """Effective bytes/s from paired (payload bytes, wall seconds)
     observations: the least-squares slope of seconds over bytes, i.e. a
     shared per-measurement offset (compute, dispatch) cancels and only
-    the byte-proportional wire leg is fitted.  Returns None when the
-    observations can't support a fit (fewer than two distinct byte
-    counts, or a non-positive slope — noise swamped the signal)."""
+    the byte-proportional wire leg is fitted.
+
+    A shared offset cancels, but a PER-OBSERVATION compute term does
+    not: two probes differing in codec (dense vs compact+q8) differ in
+    encode/decode compute as well as bytes, and on a single host that
+    compute difference leaks into the slope (DESIGN.md single-host
+    caveat).  ``compute_seconds`` — the separately measured codec
+    compute per observation (e.g. a wire-only ``probe_seconds`` of the
+    codec's group_reduce) — is subtracted from each observation before
+    fitting, so the slope is the residual byte-proportional leg.
+
+    Returns None when the observations can't support a fit (fewer than
+    two distinct byte counts, or a non-positive slope — noise swamped
+    the signal)."""
     xs = [float(b) for b in bytes_]
     ys = [float(s) for s in seconds]
+    if compute_seconds is not None:
+        if len(compute_seconds) != len(ys):
+            return None
+        ys = [y - float(c) for y, c in zip(ys, compute_seconds)]
     if len(xs) != len(ys) or len(set(xs)) < 2:
         return None
     n = len(xs)
@@ -121,8 +138,15 @@ class SelectorPriors:
                    inter_gbps=profile.inter_bw / 1e9,
                    source=profile.source)
 
-    def with_measured_inter(self, inter_bps: float) -> "SelectorPriors":
+    def with_measured_inter(self, inter_bps: float,
+                            source: str = "measured") -> "SelectorPriors":
         """Replace the slow-fabric prior with a fitted bytes/s figure
         (``fit_bandwidth``); the intra prior is kept — single-host
-        measurements only exercise the top boundary's payload deltas."""
-        return replace(self, inter_gbps=inter_bps / 1e9, source="measured")
+        measurements only exercise the top boundary's payload deltas.
+        ``source`` records HOW the figure was fitted:
+        ``"measured"`` when the codec-compute term was subtracted from
+        the probe deltas (the fitted slope is the wire leg alone),
+        ``"measured_conflated"`` when it was not (single-host fits
+        where the compute probe was unavailable — the figure ranks
+        codecs on this deployment but is not a fabric spec)."""
+        return replace(self, inter_gbps=inter_bps / 1e9, source=source)

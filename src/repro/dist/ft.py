@@ -30,6 +30,11 @@ callable.  Grammar (composition joins parts with ``"|"``)::
     fail_window:{"0": [10, 20]}
     straggler_decay:{"halflife": 8, "stragglers": {"3": 0.25}}
     fail_window:{"0": [10, 20]}|straggler_decay:{...}
+    class_scoped:{"ffn": "straggler_decay:{...}"}
+
+``class_scoped`` scopes an atomic inner policy to one coupling class's
+consensus exchanges (engines with per-class weights); its inner specs
+may not themselves be ``"|"``-composed.
 """
 from __future__ import annotations
 
@@ -118,6 +123,50 @@ def constant(weights: Sequence[float]) -> Policy:
     return policy
 
 
+def class_scoped(scopes: Mapping[str, Policy]) -> Policy:
+    """Scope straggler policies to the coupling classes a worker leads.
+
+    ``scopes[class_name] = inner_policy`` applies ``inner_policy``'s
+    weight vector ONLY to that coupling class's consensus exchanges
+    (requires an engine with per-class weights,
+    ``Engine.with_class_weights``); every other class — and the global
+    ``state["weights"]`` — stays at full weight, so a slow worker delays
+    and discounts only the payloads it is actually late for.
+
+    The returned policy is the identity on the global weights (calling
+    it yields all-ones); the per-class vectors come from
+    ``policy.class_weights(k, W) -> {class: (W,) float32}``, which the
+    training loop writes into ``state["class_weights"]``.  Marked with
+    ``policy.per_class = True`` so the loop can tell the two kinds
+    apart.  Inner policies must be atomic (no ``"|"`` composition) so
+    the spec grammar stays unambiguous.
+    """
+    scopes = dict(scopes)
+    for cls, inner in scopes.items():
+        ispec = getattr(inner, "spec", None)
+        if ispec is None:
+            raise ValueError(f"class_scoped inner policy for {cls!r} "
+                             "carries no .spec")
+        if "|" in ispec:
+            raise ValueError(
+                f"class_scoped inner policy for {cls!r} is composed "
+                f"({ispec!r}); compose class_scoped policies at the top "
+                "level instead")
+
+    def policy(k: int, W: int) -> np.ndarray:
+        return _ones(W)
+
+    def class_weights(k: int, W: int) -> dict:
+        return {cls: np.asarray(inner(k, W), np.float32)
+                for cls, inner in scopes.items()}
+
+    policy.class_weights = class_weights
+    policy.per_class = True
+    policy.spec = "class_scoped:" + json.dumps(
+        {cls: inner.spec for cls, inner in scopes.items()}, sort_keys=True)
+    return policy
+
+
 def compose(*policies: Policy) -> Policy:
     """Elementwise product of policies — failures and discounts stack.
     The composite carries a ``.spec`` only when every part does."""
@@ -129,6 +178,17 @@ def compose(*policies: Policy) -> Policy:
     specs = [getattr(p, "spec", None) for p in policies]
     if specs and all(s is not None for s in specs):
         policy.spec = "|".join(specs)
+    scoped = [p for p in policies if getattr(p, "per_class", False)]
+    if scoped:
+        def class_weights(k: int, W: int) -> dict:
+            out: dict = {}
+            for p in scoped:
+                for cls, v in p.class_weights(k, W).items():
+                    out[cls] = out.get(cls, _ones(W)) \
+                        * np.asarray(v, np.float32)
+            return out
+        policy.class_weights = class_weights
+        policy.per_class = True
     return policy
 
 
@@ -155,6 +215,10 @@ def from_spec(spec: str) -> Policy:
             built.append(straggler_decay(
                 {int(j): f for j, f in d["stragglers"].items()},
                 halflife=d.get("halflife", 0)))
+        elif name == "class_scoped":
+            scopes = json.loads(args)
+            built.append(class_scoped(
+                {cls: from_spec(inner) for cls, inner in scopes.items()}))
         else:
             raise ValueError(f"unknown ft policy {name!r} in spec {spec!r}")
     return built[0] if len(built) == 1 else compose(*built)

@@ -60,7 +60,14 @@ def main(argv=None):
                          "candidate per fabric level from predicted ring "
                          "bytes + a measured encode probe, then train on "
                          "the chosen boundary->codec map (overrides "
-                         "--wire-intra/--wire-inter)")
+                         "--wire-intra/--wire-inter); re-selects on the "
+                         "shrunk byte model at the --reconfig point")
+    ap.add_argument("--staleness", type=int, default=None, choices=[0, 1],
+                    help="overlapped-round depth: 0 = sequential round "
+                         "(default), 1 = round r's inter-node reduce "
+                         "overlaps round r+1's local prox-SGD scan "
+                         "(one-round-stale z, bounded-staleness "
+                         "async-ADMM)")
     ap.add_argument("--baseline", default=None, choices=["ddp", "topk"])
     ap.add_argument("--flat", action="store_true",
                     help="PruneX (AR) flat-consensus ablation")
@@ -146,12 +153,6 @@ def main(argv=None):
             cons = ConsensusSpec(levels=(W,), compact_from_level=1,
                                  granularity="flat")
         eng = Engine(bundle, mesh, shape, consensus=cons)
-        wire_map = None
-        if args.wire_auto:
-            from ..comm import AdaptiveWireSelector
-            sel = AdaptiveWireSelector().select(eng)
-            wire_map = sel.spec_map
-            print("[wire-auto] " + sel.to_json())
         policies = []
         if args.drop_worker:
             try:
@@ -178,7 +179,9 @@ def main(argv=None):
                         metrics_every=args.metrics_every,
                         reconfig=args.reconfig,
                         reconfig_patience=args.reconfig_patience,
-                        hlo_stats=args.hlo_stats, wire_map=wire_map)
+                        hlo_stats=args.hlo_stats,
+                        wire_auto=args.wire_auto,
+                        staleness=args.staleness)
         _, rep = train(eng, run)
         if rep.reconfigured_at is not None and rep.comm_bytes_internode:
             print(f"[train] physically reconfigured at outer iter "

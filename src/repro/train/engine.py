@@ -23,7 +23,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ConsensusSpec, ShapeConfig
 from ..core.consensus import consensus_step
-from ..core.hsadmm import EngineSpec, init_state, local_step, round_step
+from ..core.hsadmm import (EngineSpec, flush_pipeline, init_state,
+                           local_step, round_step, round_step_overlapped)
 from ..models.api import ModelBundle
 
 
@@ -86,16 +87,23 @@ class Engine:
     def __init__(self, bundle: ModelBundle, mesh: Mesh,
                  shape: Optional[ShapeConfig] = None,
                  consensus: Optional[ConsensusSpec] = None,
-                 extra_fsdp: bool = None):
+                 extra_fsdp: bool = None, class_weights: bool = False):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.mesh = mesh
         self.axes = dict(zip(mesh.axis_names, mesh.devices.shape))
         self.consensus = consensus or make_consensus_spec(self.cfg, mesh)
+        self.class_weights = class_weights
         self.spec = EngineSpec(
             plan=bundle.plan, consensus=self.consensus, hp=self.cfg.hsadmm,
-            stack_map=tuple(bundle.stack_map))
+            stack_map=tuple(bundle.stack_map), class_weights=class_weights)
         self.shape = shape
+        if self.cfg.hsadmm.staleness not in (0, 1):
+            raise ValueError(
+                f"staleness={self.cfg.hsadmm.staleness} is not supported: "
+                "0 (sequential round) and 1 (one-round-stale overlapped "
+                "pipeline) are the implemented depths")
+        self._check_cnn_batch_partition()
         # pod-granularity workers are internally synchronous-FSDP: spill
         # param dims over the data axis too
         if extra_fsdp is None:
@@ -107,6 +115,55 @@ class Engine:
         # full-shape mask state the shrunk shapes were derived from
         self.parent: Optional["Engine"] = None
         self.frozen_masks: Optional[dict] = None
+
+    def _check_cnn_batch_partition(self):
+        """W==devices CNN corner (DESIGN.md multi-device caveats): a CNN
+        worker dim sharded so the per-worker batch is 1 makes the
+        batch-group-conv trick degenerate, and GSPMD's partitioner on
+        CPU dies much later with an opaque internal reshape RET_CHECK
+        (``hlo_verifier.cc`` "Failed after spmd-partitioning") at the
+        first round dispatch.  Detect it at engine construction and name
+        the constraint instead."""
+        if self.cfg.family != "cnn" or self.shape is None \
+                or not self.shape.is_train:
+            return
+        W = self.workers
+        per_worker = self.shape.global_batch // max(W, 1)
+        if per_worker > 1:
+            return
+        lead = self._lead_spec(W)
+        axes = lead if isinstance(lead, tuple) else (lead,)
+        sharded = 1
+        for ax in axes:
+            if ax:
+                sharded *= self.axes.get(ax, 1)
+        if sharded <= 1:
+            return
+        if self.mesh.devices.flat[0].platform != "cpu":
+            return  # only the CPU partitioner is known to trip
+        raise ValueError(
+            f"CNN worker dim sharded {sharded}-way with a per-worker "
+            f"batch of {per_worker} (global_batch="
+            f"{self.shape.global_batch} over W={W} workers): this trips "
+            "a GSPMD batch-group-conv reshape corner on CPU (internal "
+            "hlo_verifier RET_CHECK after spmd-partitioning). Use a "
+            "global batch of at least 2 images per worker, or fewer "
+            "workers over the data axis (the measured-HLO benchmarks "
+            "pin W=4 over data=4).")
+
+    def _derive(self, bundle: ModelBundle, *,
+                class_weights: Optional[bool] = None) -> "Engine":
+        """A sibling Engine over ``bundle`` — same mesh/shape/hierarchy,
+        fresh jit/sharding caches — PRESERVING the reconfiguration
+        lineage (parent + frozen masks), so deriving from a
+        reconfigured engine doesn't silently forget it is one."""
+        eng = Engine(bundle, self.mesh, self.shape,
+                     consensus=self.consensus, extra_fsdp=self.extra_fsdp,
+                     class_weights=self.class_weights
+                     if class_weights is None else class_weights)
+        eng.parent = self.parent
+        eng.frozen_masks = self.frozen_masks
+        return eng
 
     def with_wire(self, intra: Optional[str] = None,
                   inter: Optional[str] = None,
@@ -125,8 +182,24 @@ class Engine:
             else hp.wire_map)
         bundle = dataclasses.replace(self.bundle,
                                      cfg=self.cfg.replace(hsadmm=hp))
-        return Engine(bundle, self.mesh, self.shape,
-                      consensus=self.consensus, extra_fsdp=self.extra_fsdp)
+        return self._derive(bundle)
+
+    def with_staleness(self, staleness: int) -> "Engine":
+        """A new Engine running its rounds at the given overlap depth
+        (``HsadmmConfig.staleness``: 0 sequential, 1 overlapped)."""
+        import dataclasses
+        hp = dataclasses.replace(self.cfg.hsadmm, staleness=staleness)
+        bundle = dataclasses.replace(self.bundle,
+                                     cfg=self.cfg.replace(hsadmm=hp))
+        return self._derive(bundle)
+
+    def with_class_weights(self, enabled: bool = True) -> "Engine":
+        """A new Engine whose consensus carries per-coupling-class
+        straggler weights (``dist.ft.class_scoped`` policies).  NOTE:
+        this changes the STATE STRUCTURE (adds a ``class_weights``
+        subtree) — init state through the new engine; a state from the
+        unscoped engine does not round-trip."""
+        return self._derive(self.bundle, class_weights=enabled)
 
     # ------------------------------------------------------------------ #
     # physical reconfiguration (paper §4.4 applied to the WHOLE run)
@@ -179,7 +252,8 @@ class Engine:
         new_plan = shrunk_plan(spec.plan, budgets, param_shapes)
         bundle2 = _dc.replace(_build(new_cfg), cfg=new_cfg, plan=new_plan)
         eng2 = Engine(bundle2, self.mesh, self.shape,
-                      consensus=self.consensus, extra_fsdp=self.extra_fsdp)
+                      consensus=self.consensus, extra_fsdp=self.extra_fsdp,
+                      class_weights=self.class_weights)
         eng2.parent = self
         eng2.frozen_masks = jax.tree.map(jnp.asarray, masks)
         if state is None:
@@ -399,17 +473,38 @@ class Engine:
         """The fused round executable (paper §4.1.4): E scanned local
         prox-SGD steps + one hierarchical consensus, one dispatch, state
         donated, state outputs pinned to the canonical shardings.  The
-        loop holds exactly two of these (dynamic + frozen)."""
+        loop holds exactly two of these (dynamic + frozen).
+
+        ``HsadmmConfig.staleness`` selects the round body: 0 jits the
+        sequential ``round_step`` (bit-identical to the pre-overlap
+        path), 1 the overlapped ``round_step_overlapped`` — same
+        signature, donation and out-sharding discipline, still exactly
+        one dispatch per round."""
         ga = max(self.cfg.grad_accum, 1)
         baxis = "data" if self.consensus.granularity == "pod" else None
+        step = round_step if self.cfg.hsadmm.staleness == 0 \
+            else round_step_overlapped
 
         def fn(state, superbatch, eta):
             from ..models import layers as _L
             _L.set_batch_axis(baxis)   # trace-time activation-layout policy
-            out = round_step(state, superbatch, self.bundle.train_loss,
-                             self.spec, eta, grad_accum=ga, frozen=frozen)
+            out = step(state, superbatch, self.bundle.train_loss,
+                       self.spec, eta, grad_accum=ga, frozen=frozen)
             _L.set_batch_axis(None)
             return out
+        return jax.jit(fn, donate_argnums=(0,),
+                       out_shardings=(self.state_shardings(), None))
+
+    def flush_pipeline_fn(self, frozen: bool):
+        """Jitted pipeline drain (``core.hsadmm.flush_pipeline``): one
+        consensus-only dispatch over the pending buffer of an overlapped
+        (staleness >= 1) round sequence, with the round executable's
+        donation/out-sharding discipline.  After it the state is exactly
+        what the sequential round would have left — required before
+        ``reconfigure`` migrates the state, and before checkpointing a
+        run that may resume at a different staleness."""
+        def fn(state):
+            return flush_pipeline(state, self.spec, frozen=frozen)
         return jax.jit(fn, donate_argnums=(0,),
                        out_shardings=(self.state_shardings(), None))
 

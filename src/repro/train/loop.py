@@ -109,6 +109,17 @@ class RunConfig:
     # explicit per-boundary codec map (one spec per level boundary;
     # e.g. an AdaptiveWireSelector spec_map) — overrides intra/inter
     wire_map: Optional[tuple] = None
+    # measurement-driven codec selection (comm.AdaptiveWireSelector) run
+    # INSIDE the loop: selects the map on the full-shape engine at
+    # start, and RE-selects on the shrunk byte model at the physical
+    # reconfiguration point (a map chosen for full shapes is stale once
+    # the payloads shrink).  Mutually exclusive with an explicit
+    # wire_map.  Both chosen maps land in the report.
+    wire_auto: bool = False
+    # overlapped-round depth override (HsadmmConfig.staleness): None
+    # keeps the engine config's value; 0/1 rebuild the engine at that
+    # depth for this run.  staleness >= 1 requires fused_rounds.
+    staleness: Optional[int] = None
     # physical reconfiguration: once masks have been frozen for
     # `reconfig_patience` rounds (None = HsadmmConfig.reconfig_patience),
     # migrate the whole state onto budget-B shapes and retrace the frozen
@@ -196,6 +207,11 @@ class TrainReport:
     # through (innermost first; None for solo engines) — reflects
     # wire_map / --wire-auto selection as well as intra/inter knobs
     wire_map: Optional[list] = None
+    # codec map of the RECONFIGURED engine's consensus (None until a
+    # physical reconfiguration): re-derived on the shrunk byte model
+    # when RunConfig.wire_auto, otherwise the carried-over map — so a
+    # report always shows which map each phase actually routed through
+    wire_map_reconfigured: Optional[list] = None
     # measured collective schedule per executable (dist.hlo), keyed
     # "dynamic"/"frozen" (+"reconfigured" after a retrace); None unless
     # RunConfig.hlo_stats
@@ -318,12 +334,45 @@ def train(engine: Engine, run: Optional[RunConfig] = None, *,
 
 
 def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
+    log = run.log
+    if run.wire_auto and run.wire_map:
+        raise ValueError("RunConfig.wire_auto and an explicit wire_map "
+                         "are mutually exclusive")
     if run.wire_intra or run.wire_inter or run.wire_map:
         engine = engine.with_wire(run.wire_intra, run.wire_inter,
                                   run.wire_map)
+    if run.wire_auto and not engine.spec.solo:
+        from ..comm.select import AdaptiveWireSelector
+        sel = AdaptiveWireSelector().select(engine)
+        engine = sel.apply(engine)
+        if log:
+            log("[loop] wire-auto selected " + sel.to_json())
+    if run.staleness is not None \
+            and run.staleness != engine.cfg.hsadmm.staleness:
+        engine = engine.with_staleness(run.staleness)
+    staleness = engine.cfg.hsadmm.staleness
+    if staleness and not run.fused_rounds:
+        raise ValueError(
+            "staleness >= 1 requires fused_rounds=True: the overlap "
+            "lives inside the fused round executable (the legacy "
+            "per-step path has no pipeline to overlap)")
+    per_class = run.ft_policy is not None \
+        and getattr(run.ft_policy, "per_class", False)
+    if per_class and not engine.class_weights:
+        engine = engine.with_class_weights(True)
+        if log:
+            log("[loop] class-scoped ft policy: enabled per-class "
+                "consensus weights")
+    if per_class:
+        rule_names = {r.name for r in engine.bundle.plan.rules}
+        unknown = set(run.ft_policy.class_weights(0, engine.workers)) \
+            - rule_names
+        if unknown:
+            raise ValueError(
+                f"class-scoped ft policy names unknown coupling classes "
+                f"{sorted(unknown)}; plan has {sorted(rule_names)}")
     cfg = engine.cfg
     hp = cfg.hsadmm
-    log = run.log
     E = max(hp.local_steps, 1)
     stream = make_stream(cfg, run.shape, engine.workers)
     base_it = batches(stream, engine.bundle.extra_inputs, run.shape)
@@ -356,6 +405,13 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
                 masks_full = _masks_from_aux(ckpt.load_aux(last),
                                              engine.bundle.plan)
                 rc_engine, _ = engine.reconfigure(masks=masks_full)
+                if run.wire_auto and not rc_engine.spec.solo:
+                    # the start-of-run selection above saw full shapes;
+                    # re-select on the shrunk byte model this session
+                    # actually dispatches
+                    from ..comm.select import AdaptiveWireSelector
+                    sel2 = AdaptiveWireSelector().select(rc_engine)
+                    rc_engine = sel2.apply(rc_engine)
                 restore_eng = rc_engine
             tmpl = jax.eval_shape(
                 lambda: restore_eng.init_state_fn()(
@@ -385,6 +441,9 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
     report = TrainReport()
     report.wire_map = None if engine.spec.solo \
         else [c.name for c in engine.spec.codecs]
+    if rc_engine is not None and not rc_engine.spec.solo:
+        report.wire_map_reconfigured = \
+            [c.name for c in rc_engine.spec.codecs]
     if run.hlo_stats:
         if rc_engine is not None:
             # reconfigured resume: the full-shape executables never
@@ -457,7 +516,34 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
             if stop:
                 break   # converged in the drained block: skip the retrace
             t_r = time.time()
+            if staleness:
+                # drain the in-flight consensus before migrating: the
+                # overlapped state still carries one un-reduced theta,
+                # and the shrunk plan must migrate a buffer the frozen
+                # masks actually describe — not a pending one
+                state, _ = engine.flush_pipeline_fn(frozen=True)(state)
             rc_engine, state = engine.reconfigure(state)
+            if run.wire_auto and not rc_engine.spec.solo:
+                # the start-of-run selection saw full-shape payloads;
+                # re-select on the shrunk byte model (satellite: a map
+                # chosen for full shapes is stale after the retrace)
+                from ..comm.select import AdaptiveWireSelector
+                sel2 = AdaptiveWireSelector().select(rc_engine)
+                rc_engine = sel2.apply(rc_engine)
+                if not any(c.stateful for c in rc_engine.spec.codecs) \
+                        and "wire" in state:
+                    # the reselected candidates are all stateless: the
+                    # old codec's error-feedback buffers are meaningless
+                    # under the new map — drop them so the state matches
+                    # the reselected engine's structure
+                    state = {k2: v for k2, v in state.items()
+                             if k2 != "wire"}
+                if log:
+                    log("[loop] wire-auto reselected on shrunk shapes: "
+                        + sel2.to_json())
+            if not rc_engine.spec.solo:
+                report.wire_map_reconfigured = \
+                    [c.name for c in rc_engine.spec.codecs]
             round_frz = rc_engine.round_step_fn(frozen=True)
             _, _, frz_b = round_comm_bytes(rc_engine)
             report.reconfigured_at = k
@@ -473,6 +559,12 @@ def _train(engine: Engine, run: RunConfig) -> tuple[dict, TrainReport]:
         if run.ft_policy is not None:
             w = run.ft_policy(k, engine.workers)
             state = dict(state, weights=jnp.asarray(w, jnp.float32))
+            if per_class:
+                cw = dict(state["class_weights"])
+                for name, v in run.ft_policy.class_weights(
+                        k, engine.workers).items():
+                    cw[name] = jnp.asarray(v, jnp.float32)
+                state["class_weights"] = cw
         was_frozen = frozen
         if run.fused_rounds:
             state, m = (round_frz if frozen else round_dyn)(

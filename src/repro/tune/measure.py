@@ -194,12 +194,43 @@ def _consensus_probe(cand: Candidate, wire_map: tuple, shape, seed: int
     return round_comm_bytes(eng)[1], sec
 
 
+def _codec_compute_seconds(cand: Candidate, wire_map: tuple, shape
+                           ) -> float:
+    """Measured codec-compute term of one consensus probe under
+    ``wire_map``: every boundary's ``group_reduce`` jitted and timed on
+    the selector's probe slab, scaled to the boundary's true element
+    count, summed over boundaries.  Two probe maps differing in codec
+    differ in this term as well as in bytes, and a per-observation term
+    does NOT cancel in the ``fit_bandwidth`` slope — so it has to be
+    measured and subtracted explicitly."""
+    from ..comm.codec import get_codec
+    from ..comm.select import _boundary_payload_shapes, _elems
+    eng = engine_for(cand, shape, t_freeze=_NEVER_FREEZE)
+    eng = eng.with_wire(None, None, wire_map)
+    sel = AdaptiveWireSelector(probe_reps=1)
+    levels = eng.spec.consensus.levels
+    total = 0.0
+    for k in range(1, len(levels) + 1):
+        codec = get_codec(wire_map[k - 1])
+        shapes = _boundary_payload_shapes(eng, k, codec)
+        elems = sum(max(1, _elems(s)) for s in shapes.values())
+        probe_s, probe_elems = sel._probe(codec, levels[k - 1])
+        total += probe_s * elems / probe_elems
+    return total
+
+
 def fit_priors(cand: Candidate, shape, *, seed: int = 0, log=None
                ) -> SelectorPriors:
     """Measured :class:`SelectorPriors` from two consensus probes of the
-    winning candidate — its own wire map vs the all-dense map.  Falls
-    back to the analytic ``WIRE_PRIORS`` (source stays ``"prior"``) when
-    the two payloads coincide or the fitted slope is unusable."""
+    winning candidate — its own wire map vs the all-dense map, with each
+    probe's separately measured codec-compute term subtracted before
+    the slope fit so codec encode/decode cost does not masquerade as
+    wire time (the DESIGN.md single-host caveat).  When the corrected
+    fit is unusable (on one host nearly everything IS compute) the
+    conflated fit is kept as a deployment-ranking figure and the prior
+    source says so (``"measured_conflated"``).  Falls back to the
+    analytic ``WIRE_PRIORS`` (source stays ``"prior"``) when the two
+    payloads coincide or no slope is usable."""
     base = SelectorPriors.from_profile(WIRE_PRIORS)
     dense_map = ("dense",) * len(cand.wire_map)
     # second probe point: the winner's own map when it differs from
@@ -209,17 +240,27 @@ def fit_priors(cand: Candidate, shape, *, seed: int = 0, log=None
         else dense_map[:-1] + ("compact+q8",)
     pairs = [_consensus_probe(cand, dense_map, shape, seed),
              _consensus_probe(cand, alt_map, shape, seed)]
-    bw = fit_bandwidth([b for b, _ in pairs], [s for _, s in pairs])
+    comp = [_codec_compute_seconds(cand, dense_map, shape),
+            _codec_compute_seconds(cand, alt_map, shape)]
+    bytes_ = [b for b, _ in pairs]
+    secs = [s for _, s in pairs]
+    bw = fit_bandwidth(bytes_, secs, compute_seconds=comp)
+    source = "measured"
+    if bw is None:
+        bw = fit_bandwidth(bytes_, secs)
+        source = "measured_conflated"
     if bw is None:
         if log:
             log("[tune:priors] bandwidth fit unusable "
                 f"(pairs={[(b, round(s * 1e3, 3)) for b, s in pairs]}); "
                 "keeping analytic priors")
         return base
-    fitted = base.with_measured_inter(bw)
+    fitted = base.with_measured_inter(bw, source=source)
     if log:
         log(f"[tune:priors] measured inter-node bandwidth "
-            f"{bw / 1e9:.3f} GB/s from {len(pairs)} consensus probes")
+            f"{bw / 1e9:.3f} GB/s from {len(pairs)} consensus probes "
+            f"(codec compute {[round(c * 1e3, 3) for c in comp]} ms "
+            f"subtracted; source={source})")
     return fitted
 
 

@@ -1,5 +1,6 @@
 """dist.ft policy semantics: window boundaries, shapes, composition."""
 import numpy as np
+import pytest
 
 from repro.dist import ft
 
@@ -54,3 +55,50 @@ def test_compose_multiplies_elementwise():
 
 def test_compose_empty_is_healthy():
     assert np.all(ft.compose()(0, 3) == 1.0)
+
+
+def test_class_scoped_identity_on_global_weights():
+    p = ft.class_scoped({"ffn": ft.straggler_decay({0: 0.5})})
+    assert p.per_class
+    assert np.all(p(7, 4) == 1.0)          # global weights untouched
+    cw = p.class_weights(7, 4)
+    assert set(cw) == {"ffn"}
+    np.testing.assert_allclose(cw["ffn"], [0.5, 1.0, 1.0, 1.0])
+    assert cw["ffn"].dtype == np.float32
+
+
+def test_class_scoped_spec_roundtrip():
+    p = ft.class_scoped({"ffn": ft.straggler_decay({1: 0.25}, halflife=4),
+                         "heads": ft.fail_window({0: (2, 5)})})
+    p2 = ft.from_spec(p.spec)
+    assert p2.spec == p.spec and p2.per_class
+    for k in (0, 3, 6):
+        a, b = p.class_weights(k, 4), p2.class_weights(k, 4)
+        assert set(a) == set(b)
+        for cls in a:
+            np.testing.assert_allclose(a[cls], b[cls])
+
+
+def test_class_scoped_rejects_composed_inner():
+    inner = ft.compose(ft.healthy(), ft.straggler_decay({0: 0.5}))
+    with pytest.raises(ValueError, match="composed"):
+        ft.class_scoped({"ffn": inner})
+    with pytest.raises(ValueError, match="no .spec"):
+        ft.class_scoped({"ffn": lambda k, W: np.ones((W,), np.float32)})
+
+
+def test_compose_aggregates_class_weights():
+    """Scoped parts multiply per class; global parts stay global."""
+    p = ft.compose(ft.straggler_decay({3: 0.5}),
+                   ft.class_scoped({"ffn": ft.constant([0.5, 1, 1, 1])}),
+                   ft.class_scoped({"ffn": ft.constant([0.5, 1, 1, 1]),
+                                    "heads": ft.constant([1, 0.25, 1, 1])}))
+    assert p.per_class
+    np.testing.assert_allclose(p(0, 4), [1, 1, 1, 0.5])
+    cw = p.class_weights(0, 4)
+    np.testing.assert_allclose(cw["ffn"], [0.25, 1, 1, 1])
+    np.testing.assert_allclose(cw["heads"], [1, 0.25, 1, 1])
+    p2 = ft.from_spec(p.spec)
+    assert p2.spec == p.spec
+    np.testing.assert_allclose(p2.class_weights(0, 4)["ffn"],
+                               [0.25, 1, 1, 1])

@@ -120,10 +120,13 @@ def _engine(t_freeze=3, wire_inter=None):
                                           granularity="chip"))
 
 
-def test_loop_one_dispatch_per_round(monkeypatch):
+@pytest.mark.parametrize("staleness", [0, 1])
+def test_loop_one_dispatch_per_round(monkeypatch, staleness):
     """CI guard: through the REAL training loop, one fused round is exactly
     one jitted dispatch, from exactly 2 executables (dynamic + frozen);
-    the legacy per-step entry points never fire."""
+    the legacy per-step entry points never fire.  Holds at both overlap
+    depths — the overlapped (staleness=1) round is the same single
+    donated executable."""
     counts = monitor.CallCounter()
     real_round = Engine.round_step_fn
     real_local = Engine.local_step_fn
@@ -141,7 +144,8 @@ def test_loop_one_dispatch_per_round(monkeypatch):
 
     eng = _engine(t_freeze=3)
     _, rep = train(eng, RunConfig(outer_iters=5, shape=SHAPE, eta=3e-3,
-                                  metrics_every=10, log=None))
+                                  staleness=staleness, metrics_every=10,
+                                  log=None))
     assert counts.calls == 5                      # 1 dispatch per round
     assert counts.by_label.get("local", 0) == 0
     assert counts.by_label.get("cons", 0) == 0
@@ -151,10 +155,15 @@ def test_loop_one_dispatch_per_round(monkeypatch):
     assert len(rep.losses) == 5                   # drained despite cadence
 
 
-def test_fused_round_steady_state_compiles_nothing():
+@pytest.mark.parametrize("staleness", [0, 1])
+def test_fused_round_steady_state_compiles_nothing(staleness):
     """After warmup, the hot loop must not build new executables — a shape
-    or constant leak that retriggers compilation fails here."""
+    or constant leak that retriggers compilation fails here.  The
+    overlapped round must be just as steady (no per-round retrace from
+    the consensus/scan double-read of the donated input)."""
     eng = _engine(t_freeze=100)
+    if staleness:
+        eng = eng.with_staleness(staleness)
     from repro.data.pipeline import batches, superbatches
     from repro.data.synthetic import make_stream
     stream = make_stream(eng.cfg, SHAPE, eng.workers)
@@ -172,8 +181,11 @@ def test_fused_round_steady_state_compiles_nothing():
     assert stats.compiles == 0
 
 
-def test_round_step_donates_state():
+@pytest.mark.parametrize("staleness", [0, 1])
+def test_round_step_donates_state(staleness):
     eng = _engine()
+    if staleness:
+        eng = eng.with_staleness(staleness)
     from repro.data.pipeline import batches, superbatches
     from repro.data.synthetic import make_stream
     stream = make_stream(eng.cfg, SHAPE, eng.workers)

@@ -1,0 +1,427 @@
+"""Overlapped consensus rounds (``HsadmmConfig.staleness``) — the
+bounded-staleness conformance suite.
+
+staleness=0 must stay the sequential algorithm BIT-identically (the
+round-body selection, the per-coupling-class weight chains, and the
+``with_staleness``/``with_class_weights`` derivation plumbing are all
+exercised on the same matrix of consensus hierarchies x wire codecs the
+reconfiguration suite proves).  staleness=1 is the one-round-stale
+async-ADMM relaxation: round r's consensus runs over the state as
+dispatched while round r+1's local scan reads the same input — its loss
+trajectory must track the sequential run within a bounded-divergence
+tolerance, and ``flush_pipeline`` must drain the in-flight consensus
+(checkpoints/reconfiguration never see a pending buffer).
+
+Also here: the multi-device regression for the W==devices CNN
+batch-group-conv corner (satellite: a clear ValueError instead of an XLA
+internal RET_CHECK) and the stale-wire-selection-after-reconfig
+regression (the report's analytic bytes and recorded map must describe
+the RESELECTED engine that actually dispatched, and track the measured
+HLO schedule).
+
+The ``WIRE_CODEC`` env var (CI codec-matrix job) swaps the default
+top-boundary codec for the loop-level guards; the conformance matrix
+pins its codecs explicitly.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+from repro.core import consensus_step, get_leaf, leaf_keys, local_step, \
+    round_step
+from repro.core.hsadmm import round_step_overlapped
+from repro.data.pipeline import batches, superbatches
+from repro.data.synthetic import make_stream
+from repro.dist import ft
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.train.engine import Engine
+from repro.train.loop import RunConfig, train
+
+SHAPE = ShapeConfig("tiny", "train", 32, 8)
+E = 2
+ETA = jnp.float32(3e-3)
+
+HIERARCHIES = {
+    "chip": ((2, 2), 1, "chip"),   # compact from the node boundary
+    "pod":  ((2, 2), 0, "pod"),    # compact from the very first boundary
+    "flat": ((4,), 1, "flat"),     # PruneX(AR) ablation: dense AllReduce
+}
+CODECS = ["dense", "compact+q8", "topk:0.01"]
+
+
+def _engine(hier="chip", wire_inter=None, t_freeze=100, patience=1,
+            staleness=0, use_env_codec=False):
+    levels, kc, gran = HIERARCHIES[hier]
+    wire = wire_inter if wire_inter is not None \
+        else (os.environ.get("WIRE_CODEC") if use_env_codec else None)
+    cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+        hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=E,
+                            t_freeze=t_freeze, reconfig_patience=patience,
+                            wire_inter=wire, staleness=staleness))
+    return Engine(build(cfg), make_host_mesh(), SHAPE,
+                  consensus=ConsensusSpec(levels=levels,
+                                          compact_from_level=kc,
+                                          granularity=gran))
+
+
+def _superbatch_iter(eng):
+    stream = make_stream(eng.cfg, SHAPE, eng.workers)
+    return superbatches(batches(stream, eng.bundle.extra_inputs, SHAPE), E)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_trees_track(a, b, rel=5e-2):
+    """Bounded divergence: per-leaf relative l2 distance under ``rel``."""
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x, np.float64), np.asarray(y, np.float64)
+        d = np.linalg.norm((x - y).ravel())
+        assert d <= rel * (np.linalg.norm(x.ravel()) + 1e-6), \
+            (d, np.linalg.norm(x.ravel()))
+
+
+# ---------------------------------------------------------------------------
+# staleness=0: bit-identical across the hierarchy x codec matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hier", sorted(HIERARCHIES))
+@pytest.mark.parametrize("codec", CODECS)
+def test_staleness0_bit_identical(hier, codec):
+    """A plain engine and its ``with_staleness(0).with_class_weights(True)``
+    derivative (all-ones class weights == unscoped semantics, but routed
+    through the partitioned per-class wire_reduce) produce byte-equal
+    theta/z/u — and byte-equal wire EF state for stateful codecs — over
+    three rounds on every hierarchy."""
+    eng = _engine(hier, codec)
+    eng2 = eng.with_staleness(0).with_class_weights(True)
+    it = _superbatch_iter(eng)
+    sbs = [next(it) for _ in range(3)]
+    s0 = eng.init_state_fn()(jax.random.PRNGKey(0))
+    s1 = eng2.init_state_fn()(jax.random.PRNGKey(0))
+    assert "class_weights" in s1 and "class_weights" not in s0
+    fn0 = eng.round_step_fn(frozen=False)
+    fn1 = eng2.round_step_fn(frozen=False)
+    for sb in sbs:
+        s0, m0 = fn0(s0, sb, ETA)
+        s1, m1 = fn1(s1, sb, ETA)
+        np.testing.assert_array_equal(np.asarray(m0.losses),
+                                      np.asarray(m1.losses))
+    for grp in ("theta", "u"):
+        _assert_trees_equal(s0[grp], s1[grp])
+    for z0, z1 in zip(s0["z"], s1["z"]):
+        _assert_trees_equal(z0, z1)
+    if "wire" in s0:
+        _assert_trees_equal(s0["wire"], s1["wire"])
+
+
+# ---------------------------------------------------------------------------
+# staleness=1: bounded divergence + pipeline drain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hier,codec", [
+    ("chip", "dense"), ("chip", "topk:0.01"),
+    ("pod", "compact+q8"), ("flat", "dense"),
+])
+def test_staleness1_bounded_divergence(hier, codec):
+    """Four overlapped rounds + a pipeline flush track the sequential run:
+    per-round losses within tolerance, theta within a relative-l2 bound,
+    and the flush advances the consensus counter past the in-flight
+    buffer (k = rounds + 1: the overlapped schedule pays one degenerate
+    consensus over the replicated init)."""
+    eng = _engine(hier, codec)
+    ovl = eng.with_staleness(1)
+    it = _superbatch_iter(eng)
+    sbs = [next(it) for _ in range(4)]
+
+    s_seq = eng.init_state_fn()(jax.random.PRNGKey(0))
+    fn_seq = eng.round_step_fn(frozen=False)
+    losses_seq = []
+    for sb in sbs:
+        s_seq, m = fn_seq(s_seq, sb, ETA)
+        losses_seq.append(np.asarray(m.losses))
+
+    s_ovl = ovl.init_state_fn()(jax.random.PRNGKey(0))
+    fn_ovl = ovl.round_step_fn(frozen=False)
+    losses_ovl = []
+    for sb in sbs:
+        s_ovl, m = fn_ovl(s_ovl, sb, ETA)
+        losses_ovl.append(np.asarray(m.losses))
+    assert int(s_seq["k"]) == int(s_ovl["k"]) == 4
+    s_ovl, m_flush = ovl.flush_pipeline_fn(frozen=False)(s_ovl)
+    assert int(s_ovl["k"]) == 5            # drained the in-flight buffer
+    assert np.asarray(m_flush.losses).size == 0
+
+    # round 1's scan reads the same z0 on both paths: identical losses
+    np.testing.assert_array_equal(losses_ovl[0], losses_seq[0])
+    np.testing.assert_allclose(np.stack(losses_ovl),
+                               np.stack(losses_seq), rtol=5e-2, atol=1e-2)
+    _assert_trees_track(s_seq["theta"], s_ovl["theta"], rel=5e-2)
+
+
+@pytest.mark.parametrize("codec", ["dense", "topk:0.01"])
+def test_overlapped_round_is_consensus_plus_scan(codec):
+    """Differential decomposition of one overlapped round: every
+    consensus-owned subtree (z, u, rho, k — and the wire EF buffers for a
+    stateful codec) is BIT-identical to a standalone ``consensus_step``
+    over the round's input state, while theta/mom equal the local scan
+    over that same input — the no-snap merge is exactly 'consensus of
+    round r || scan of round r+1'."""
+    eng = _engine("chip", codec)
+    spec = eng.spec
+    loss = eng.bundle.train_loss
+    it = _superbatch_iter(eng)
+    state = eng.init_state_fn()(jax.random.PRNGKey(0))
+    # one sequential round first so masks/EF buffers are non-trivial
+    rseq = jax.jit(lambda s, b: round_step(s, b, loss, spec, ETA))
+    state, _ = rseq(state, next(it))
+    if codec.startswith("topk"):
+        assert "wire" in state
+    sb = next(it)
+
+    ovl = jax.jit(
+        lambda s, b: round_step_overlapped(s, b, loss, spec, ETA))
+    out, _ = ovl(state, sb)
+    man = jax.jit(
+        lambda s: consensus_step(s, spec, frozen=False, detail=False))
+    cst, _ = man(state)
+    for key in out:
+        if key in ("theta", "mom"):
+            continue
+        _assert_trees_equal(out[key], cst[key])
+
+    jl = jax.jit(lambda s, b: local_step(s, b, loss, spec, ETA))
+    st = state
+    for e in range(E):
+        st, _ = jl(st, jax.tree.map(lambda x: x[e], sb))
+    for k in leaf_keys(st["theta"]):
+        np.testing.assert_allclose(np.asarray(get_leaf(out["theta"], k)),
+                                   np.asarray(get_leaf(st["theta"], k)),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# loop plumbing: the staleness knob, freeze transition, reconfig drain
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_unsupported_staleness():
+    with pytest.raises(ValueError, match="staleness=2"):
+        _engine("chip", staleness=2)
+
+
+def test_loop_staleness_requires_fused_rounds():
+    eng = _engine("chip", use_env_codec=True)
+    with pytest.raises(ValueError, match="fused_rounds"):
+        train(eng, RunConfig(outer_iters=2, shape=SHAPE, staleness=1,
+                             fused_rounds=False, log=None))
+
+
+def test_loop_overlapped_run_freezes_and_finishes():
+    """The real loop at staleness=1: the knob rebuilds the engine, the
+    dynamic->frozen transition keeps the one-dispatch cadence, losses
+    stay finite."""
+    eng = _engine("chip", t_freeze=3, use_env_codec=True)
+    _, rep = train(eng, RunConfig(outer_iters=5, shape=SHAPE, eta=3e-3,
+                                  staleness=1, metrics_every=2, log=None))
+    assert rep.executables == ["dynamic"] * 3 + ["frozen"] * 2
+    assert rep.frozen_at == 3
+    assert rep.final_engine.cfg.hsadmm.staleness == 1
+    assert np.all(np.isfinite(rep.losses))
+
+
+def test_loop_reconfig_drains_overlapped_pipeline():
+    """reconfig=True at staleness=1: the loop flushes the in-flight
+    consensus before migrating, the retraced engine keeps running
+    overlapped, and the run finishes on the reconfigured executable."""
+    eng = _engine("chip", t_freeze=2, patience=1, use_env_codec=True)
+    _, rep = train(eng, RunConfig(outer_iters=6, shape=SHAPE, eta=3e-3,
+                                  staleness=1, reconfig=True,
+                                  metrics_every=10, log=None))
+    assert rep.executables == ["dynamic"] * 2 + ["frozen"] \
+        + ["reconfigured"] * 3
+    assert rep.frozen_at == 2 and rep.reconfigured_at == 3
+    assert rep.final_engine.reconfigured
+    assert rep.final_engine.cfg.hsadmm.staleness == 1
+    assert np.all(np.isfinite(rep.losses))
+
+
+# ---------------------------------------------------------------------------
+# per-coupling-class straggler scoping through the loop
+# ---------------------------------------------------------------------------
+
+
+def test_class_scoped_policy_through_loop():
+    """A class_scoped ft policy auto-enables per-class consensus weights
+    and the run stays finite; naming an unknown coupling class raises."""
+    pol = ft.class_scoped({"ffn": ft.straggler_decay({0: 0.5})})
+    eng = _engine("chip", use_env_codec=True)
+    assert not eng.class_weights
+    _, rep = train(eng, RunConfig(outer_iters=2, shape=SHAPE, eta=3e-3,
+                                  ft_policy=pol, metrics_every=1,
+                                  log=None))
+    assert rep.final_engine.class_weights
+    assert np.all(np.isfinite(rep.losses))
+
+    bad = ft.class_scoped({"no_such_class": ft.healthy()})
+    with pytest.raises(ValueError, match="no_such_class"):
+        train(_engine("chip", use_env_codec=True),
+              RunConfig(outer_iters=1, shape=SHAPE, ft_policy=bad,
+                        log=None))
+
+
+def test_runconfig_json_roundtrip_new_fields():
+    pol = ft.class_scoped({"ffn": ft.straggler_decay({1: 0.25})})
+    run = RunConfig(outer_iters=3, shape=SHAPE, staleness=1,
+                    wire_auto=True, ft_policy=pol)
+    run2 = RunConfig.from_json(run.to_json())
+    assert run2.staleness == 1 and run2.wire_auto
+    assert run2.ft_policy.spec == pol.spec
+    assert getattr(run2.ft_policy, "per_class", False)
+
+
+def test_wire_auto_excludes_explicit_map():
+    eng = _engine("chip")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        train(eng, RunConfig(outer_iters=1, shape=SHAPE, wire_auto=True,
+                             wire_map=("dense", "dense"), log=None))
+
+
+# ---------------------------------------------------------------------------
+# W == devices CNN batch-group-conv corner: a clear error, not an XLA
+# internal RET_CHECK (8 forced devices)
+# ---------------------------------------------------------------------------
+
+_CNN_GUARD_SRC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, jax
+from repro.configs import get_config
+from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.train.engine import Engine
+
+SHAPE = ShapeConfig("tiny", "train", 32, 8)
+cfg = get_config("resnet18", smoke=True).replace(
+    hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=2, t_freeze=2))
+bundle = build(cfg)
+out = {}
+# W=8 over data=8: per-worker batch 1 with a sharded lead dim -> the
+# GSPMD corner; the engine must refuse with an actionable message
+try:
+    Engine(bundle, make_host_mesh(data=8), SHAPE,
+           consensus=ConsensusSpec(levels=(2, 4), compact_from_level=1,
+                                   granularity="chip", node_size=2))
+    out["raised"] = False
+except ValueError as e:
+    out["raised"] = True
+    out["msg"] = str(e)
+# control: W=4 over data=4 (per-worker batch 2) constructs fine
+eng = Engine(bundle, make_host_mesh(data=4), SHAPE,
+             consensus=ConsensusSpec(levels=(2, 2), compact_from_level=1,
+                                     granularity="chip", node_size=2))
+out["control_ok"] = eng.workers == 4
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_cnn_batch_group_conv_guard_on_8_devices():
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _CNN_GUARD_SRC],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["raised"], "W==devices CNN corner no longer raises"
+    assert "batch-group-conv" in res["msg"]
+    assert "W=8" in res["msg"]
+    assert res["control_ok"]
+
+
+# ---------------------------------------------------------------------------
+# stale wire selection after reconfig: the report describes the engine
+# that actually dispatched, and the analytic bytes track the measured
+# HLO schedule (8 forced devices)
+# ---------------------------------------------------------------------------
+
+_RESELECT_SRC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, jax
+from repro.configs import get_config
+from repro.configs.base import ConsensusSpec, HsadmmConfig, ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.train.engine import Engine
+from repro.train.loop import RunConfig, round_comm_bytes, train
+
+SHAPE = ShapeConfig("tiny", "train", 32, 8)
+cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+    hsadmm=HsadmmConfig(rho1=1e-2, rho2=1e-3, local_steps=2, t_freeze=2,
+                        reconfig_patience=1))
+eng = Engine(build(cfg), make_host_mesh(model=2), SHAPE,
+             consensus=ConsensusSpec(levels=(2, 2), compact_from_level=1,
+                                     granularity="chip", node_size=2))
+_, rep = train(eng, RunConfig(outer_iters=6, shape=SHAPE, eta=3e-3,
+                              reconfig=True, wire_auto=True,
+                              hlo_stats=True, metrics_every=10, log=None))
+fe = rep.final_engine
+print("RESULT " + json.dumps({
+    "wire_map": rep.wire_map,
+    "wire_map_rec": rep.wire_map_reconfigured,
+    "codecs_final": [c.name for c in fe.spec.codecs],
+    "analytic_frozen": rep.comm_bytes_internode[rep.reconfigured_at - 1],
+    "analytic_rec": rep.comm_bytes_internode[-1],
+    "analytic_rec_engine": round_comm_bytes(fe)[2],
+    "hlo_frozen": rep.hlo_comm["frozen"]["internode_bytes"],
+    "hlo_rec": rep.hlo_comm["reconfigured"]["internode_bytes"],
+    "executables": rep.executables}))
+"""
+
+
+def test_reconfig_reselects_wire_map_and_bytes_track_hlo():
+    """--wire-auto + reconfig through the REAL loop on an 8-device mesh:
+    the report records BOTH maps, the reconfigured map/bytes describe
+    the reselected engine that actually dispatched (the stale-selection
+    regression), and the analytic payload shrink tracks the measured
+    compiled-HLO inter-node shrink within a 2.5x band."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _RESELECT_SRC],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=580)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["executables"] == ["dynamic"] * 2 + ["frozen"] \
+        + ["reconfigured"] * 3
+    assert res["wire_map"] is not None
+    assert res["wire_map_rec"] == res["codecs_final"]
+    # the loop's per-round accounting re-derives from the reselected
+    # reconfigured engine — not the stale full-shape selection
+    assert res["analytic_rec"] == res["analytic_rec_engine"]
+    assert 0 < res["analytic_rec"] < res["analytic_frozen"]
+    assert 0 < res["hlo_rec"] < res["hlo_frozen"]
+    r_analytic = res["analytic_rec"] / res["analytic_frozen"]
+    r_measured = res["hlo_rec"] / res["hlo_frozen"]
+    assert 0.4 < r_measured / r_analytic < 2.5, (r_measured, r_analytic)

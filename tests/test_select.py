@@ -104,3 +104,35 @@ def test_wire_map_length_mismatch_raises():
     eng = _engine()
     with pytest.raises(ValueError):
         eng.with_wire(wire_map=("q8",)).spec.codecs
+
+
+def test_fit_bandwidth_subtracts_codec_compute():
+    """Synthetic known-bandwidth fixture: a per-observation codec-compute
+    term does NOT cancel in the slope (unlike a shared offset) — the
+    corrected fit must recover the true bandwidth where the conflated
+    fit is badly off."""
+    from repro.dist.fabric import fit_bandwidth
+    bw = 2e9
+    bytes_ = [1e6, 9e6]
+    comp = [0.004, 0.001]                  # dense encodes MORE elements
+    shared = 0.002                         # dispatch overhead: cancels
+    secs = [b / bw + c + shared for b, c in zip(bytes_, comp)]
+    conflated = fit_bandwidth(bytes_, secs)
+    corrected = fit_bandwidth(bytes_, secs, compute_seconds=comp)
+    assert abs(corrected - bw) / bw < 1e-6
+    assert abs(conflated - bw) > bw        # conflation was 4x off here
+    # a compute vector of the wrong length can't be attributed
+    assert fit_bandwidth(bytes_, secs, compute_seconds=[0.1]) is None
+    # over-subtraction flipping the slope negative -> unusable, not junk
+    assert fit_bandwidth(bytes_, [b / bw for b in bytes_],
+                         compute_seconds=[0.0, 1.0]) is None
+
+
+def test_selector_priors_record_fit_source():
+    from repro.dist.fabric import SelectorPriors
+    p = SelectorPriors()
+    assert p.source == "prior"
+    m = p.with_measured_inter(3e9)
+    assert m.source == "measured" and m.inter_gbps == 3.0
+    c = p.with_measured_inter(3e9, source="measured_conflated")
+    assert c.source == "measured_conflated" and c.inter_gbps == 3.0

@@ -346,6 +346,65 @@ def reconfig_rows(quick=False, reps=8, arch="tinyllama-1.1b", tag=""):
              f"reconfig_speedup={us_full/us_rec:.2f}x")]
 
 
+def moe_rows(quick=False, reps=8):
+    """family="moe" expert-level pruning end-to-end (qwen2-moe smoke):
+    paired-delta wall time of the full-shape masked frozen round vs the
+    reconfigured budget-B round at expert keep 0.5 — whole experts
+    dropped from the stacked (layer, expert) weights, the SAME router
+    logit columns sliced (routing renormalizes over survivors), shared
+    experts riding their own width class.  Timing rounds interleave the
+    two executables and the reconfigured wall is the full-shape median
+    plus the median PAIRED delta, so machine-load drift cancels (the
+    wire_round_rows methodology)."""
+    from repro.data.pipeline import batches, superbatches
+    from repro.data.synthetic import make_stream
+
+    E = 4
+    eng, shape = _reconfig_bench_engine(E, "qwen2-moe-a2.7b")
+    stream = make_stream(eng.cfg, shape, eng.workers)
+    sb = next(superbatches(
+        batches(stream, eng.bundle.extra_inputs, shape), E))
+    eta = jnp.float32(1e-3)
+
+    state = eng.init_state_fn()(jax.random.PRNGKey(0))
+    rdyn = eng.round_step_fn(frozen=False)
+    for _ in range(2):
+        state, _ = rdyn(state, sb, eta)           # settle the masks
+    eng2, st2 = eng.reconfigure(state)            # migrate before timing
+
+    cells = {
+        "full": {"fn": eng.round_step_fn(frozen=True), "st": state,
+                 "ts": []},
+        "rec": {"fn": eng2.round_step_fn(frozen=True), "st": st2,
+                "ts": []},
+    }
+    for c in cells.values():
+        c["st"], _ = c["fn"](c["st"], sb, eta)    # compile
+        jax.block_until_ready(c["st"])
+    for _ in range(reps):
+        for name in ("full", "rec"):              # interleaved pairs
+            c = cells[name]
+            t0 = time.time()
+            c["st"], _ = c["fn"](c["st"], sb, eta)
+            jax.block_until_ready(c["st"])
+            c["ts"].append(time.time() - t0)
+    base = np.array(cells["full"]["ts"])
+    us_full = float(np.median(base)) * 1e6
+    us_rec = us_full + float(
+        np.median(np.array(cells["rec"]["ts"]) - base)) * 1e6
+    cfg, cfg2 = eng.cfg, eng2.cfg
+    return [
+        ("round.moe_frozen_full_us", us_full,
+         f"full-shape masked round (experts={cfg.n_experts} "
+         f"top-{cfg.moe_top_k}, d_expert={cfg.d_expert_eff})"),
+        ("round.moe_frozen_reconfig_us", us_rec,
+         f"retraced budget-B round (experts={cfg2.n_experts}, "
+         f"d_expert={cfg2.d_expert_eff}, capacity pinned to parent "
+         f"E={cfg2.moe_capacity_base}); "
+         f"reconfig_speedup={us_full/max(us_rec, 1.0):.2f}x"),
+    ]
+
+
 def overlap_rows(quick=False, reps=8):
     """Overlapped rounds (HsadmmConfig.staleness=1) vs the sequential
     round on the paper's resnet18: interleaved paired-delta wall time of
@@ -521,12 +580,16 @@ def main():
     # the paper's own model class: ResNet through the coupling-graph
     # reconfiguration (frozen full-shape vs retraced shrunk round)
     rows.extend(reconfig_rows(quick, arch="resnet18", tag="resnet_"))
+    # expert-level pruning: whole experts off the all-to-all/router wire
+    rows.extend(moe_rows(quick))
     # overlapped consensus rounds: staleness 0 vs 1 on the paper's model
     rows.extend(overlap_rows(quick))
     if not quick:
         rows.extend(reconfig_hlo_rows(quick))
         rows.extend(reconfig_hlo_rows(quick, arch="resnet18",
                                       tag="resnet_"))
+        rows.extend(reconfig_hlo_rows(quick, arch="qwen2-moe-a2.7b",
+                                      tag="moe_"))
     rows.extend(kernel_rows(quick))
     rows.extend(wire_codec_rows(quick))
     rows.extend(wire_round_rows(quick))

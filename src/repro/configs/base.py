@@ -153,6 +153,15 @@ class ArchConfig:
     moe_top_k: int = 0
     n_shared_experts: int = 0
     d_expert: int = 0  # per-expert hidden dim (defaults to d_ff)
+    # shared-expert hidden width; 0 derives n_shared_experts * d_expert_eff.
+    # Set explicitly by moe.shrink_config so the shared ("ffn") and routed
+    # ("moe_ffn") budgets shrink independently.
+    d_shared: int = 0
+    # capacity base for the dispatch buffers; 0 derives n_experts.  Pinned
+    # to the parent's full expert count by moe.shrink_config so the
+    # per-expert capacity (and hence drop behaviour) of the reconfigured
+    # model matches the full-shape masked model exactly.
+    moe_capacity_experts: int = 0
     # dispatch token-group count: routing/capacity runs independently per
     # contiguous token group; set to the data-axis size for pod-granularity
     # archs so dispatch buffers stay batch-sharded (DESIGN.md §8)
@@ -225,6 +234,14 @@ class ArchConfig:
     @property
     def d_expert_eff(self) -> int:
         return self.d_expert or self.d_ff
+
+    @property
+    def d_shared_eff(self) -> int:
+        return self.d_shared or self.n_shared_experts * self.d_expert_eff
+
+    @property
+    def moe_capacity_base(self) -> int:
+        return self.moe_capacity_experts or self.n_experts
 
     def replace(self, **kw) -> "ArchConfig":
         return dataclasses.replace(self, **kw)

@@ -19,7 +19,9 @@ def full() -> ArchConfig:
         moe_top_k=8,
         d_expert=512,
         param_dtype="bfloat16",
-        prune_targets=("moe_ffn", "heads"),
+        # "experts" prunes whole routed experts; keep_count(40, 0.5, 2)
+        # = 20 surviving experts >= moe_top_k = 8
+        prune_targets=("moe_ffn", "heads", "experts"),
         skip_shapes=("long_500k",),
         consensus=ConsensusSpec(granularity="chip"),
     )

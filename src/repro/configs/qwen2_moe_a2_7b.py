@@ -21,7 +21,10 @@ def full() -> ArchConfig:
         n_shared_experts=4,
         d_expert=1408,
         param_dtype="bfloat16",
-        prune_targets=("moe_ffn", "ffn", "heads"),
+        # "experts" prunes whole routed experts (shared experts exempt —
+        # their width rides the "ffn" rule); keep_count(60, 0.5, 2) = 30
+        # surviving experts >= moe_top_k = 4
+        prune_targets=("moe_ffn", "ffn", "heads", "experts"),
         skip_shapes=("long_500k",),
         consensus=ConsensusSpec(granularity="chip"),
     )

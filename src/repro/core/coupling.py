@@ -212,4 +212,36 @@ class CouplingGraph:
             if c.groups < min_groups:
                 continue
             rules.append(c.rule())
-        return SparsityPlan(tuple(rules) + tuple(extra_rules))
+        return validate_compaction_order(
+            SparsityPlan(tuple(rules) + tuple(extra_rules)))
+
+
+def validate_compaction_order(plan: SparsityPlan) -> SparsityPlan:
+    """Enforce the stack-compaction ordering contract and return ``plan``.
+
+    Rules may nest: one rule's STACK axis can be the group axis another
+    (compactable) rule slices — the MoE family's ``moe_ffn`` masks are
+    stacked per (layer, expert) while the ``experts`` rule compacts the
+    expert axis itself.  ``compact_params`` applies rules in plan order
+    and ``expand_params`` in reverse, so sequential slicing is only
+    consistent when the stacked rule comes FIRST: its (*stack, B) index
+    tensors must be built (and consumed) against the still-full stack
+    extent before the compacting rule shrinks it.  A plan that orders
+    them the other way round would gather with stale stack shapes —
+    refuse at construction time instead of failing inside a trace."""
+    pos = {r.name: i for i, r in enumerate(plan.rules)}
+    for i, r in enumerate(plan.rules):
+        for la in r.all_leaves:
+            for ax in range(r.stack_ndims):
+                for r2 in plan.rules:
+                    if r2 is r or not r2.compactable:
+                        continue
+                    hit = any(la2.key == la.key and la2.axes[0] == ax
+                              for la2 in r2.all_leaves)
+                    if hit and pos[r2.name] < i:
+                        raise ValueError(
+                            f"rule {r.name!r} stacks over axis {ax} of "
+                            f"{la.key!r}, which rule {r2.name!r} compacts "
+                            f"— the stacked rule must precede the "
+                            f"compacting rule in the plan")
+    return plan

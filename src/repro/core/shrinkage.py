@@ -26,6 +26,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from .coupling import validate_compaction_order
 from .sparsity import (GroupRule, LeafAxis, SparsityPlan, channel_idx,
                        get_leaf, set_leaf)
 
@@ -112,7 +113,15 @@ def compact_params(params: dict, plan: SparsityPlan, idxs: dict,
                    offset: int = 0) -> dict:
     """Slice every rule's kept groups out of every participating leaf
     (scored members AND followers; block-unit indices are expanded to
-    channel units)."""
+    channel units).
+
+    Rules compose across axes — including STACK axes: the MoE ``experts``
+    rule slices the (layer, expert) stack the ``moe_ffn`` masks live on.
+    Plan-order application makes that consistent exactly when the stacked
+    rule precedes the compacting one (``coupling.validate_compaction_
+    order``): its (*stack, B) indices are consumed against the still-full
+    stack extent, then the stack itself shrinks."""
+    validate_compaction_order(plan)
     for rule in plan.rules:
         if not rule.compactable:
             continue  # projection-only rule (paper slices filter/channel only)
@@ -129,6 +138,7 @@ def expand_params(params: dict, plan: SparsityPlan, idxs: dict,
                   fulls: dict, offset: int = 0) -> dict:
     """Inverse of :func:`compact_params` (rules applied in reverse order).
     ``fulls`` is in the rule's group (block) units, like the budgets."""
+    validate_compaction_order(plan)
     for rule in reversed(plan.rules):
         if not rule.compactable:
             continue

@@ -156,6 +156,12 @@ def main(argv=None):
                          "checkpoint")
     ap.add_argument("--lanes", type=int, default=4,
                     help="decode lanes per sequence bucket")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature compiled into the decode "
+                         "executable (0 = greedy argmax, the default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only used when "
+                         "--temperature > 0)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -172,6 +178,12 @@ def main(argv=None):
         if cfg.family == "cnn":
             print(f"[serve] serving widths: stem {bundle.cfg.cnn_stem}, "
                   f"streams {bundle.cfg.cnn_outs}, mid {bundle.cfg.cnn_cmid}")
+        elif cfg.family == "moe":
+            print(f"[serve] serving widths: experts {bundle.cfg.n_experts} "
+                  f"(top-{bundle.cfg.moe_top_k}), d_expert "
+                  f"{bundle.cfg.d_expert_eff}, shared d "
+                  f"{bundle.cfg.d_shared_eff}, kv heads "
+                  f"{bundle.cfg.n_kv_heads}")
         else:
             print(f"[serve] serving widths: d_ff {bundle.cfg.d_ff}, "
                   f"kv heads {bundle.cfg.n_kv_heads}")
@@ -184,7 +196,8 @@ def main(argv=None):
         spec = spec_for_workload(P, G, lanes=args.lanes,
                                  batch_buckets=(1, 2))
     t0 = time.time()
-    engine = BucketEngine(bundle, spec, params_like=params)
+    engine = BucketEngine(bundle, spec, params_like=params,
+                          temperature=args.temperature, top_p=args.top_p)
     print(f"[serve] compiled {engine.num_executables} executables in "
           f"{time.time() - t0:.1f}s; cache {engine.cache_bytes()} B "
           f"across seq buckets {spec.seq_buckets}")

@@ -95,6 +95,11 @@ def main(argv=None):
     ap.add_argument("--reconfig", default=None,
                     help="comma list of reconfig rounds ('none' allowed)")
     ap.add_argument("--node-size", type=int, default=2)
+    ap.add_argument("--seed-wire", action="store_true",
+                    help="run the AdaptiveWireSelector on a representative "
+                         "engine first and seed the stage-1 grid's "
+                         "per-boundary codecs from its map (recorded in "
+                         "BENCH_tune.json as seeded_wire_map)")
     ap.add_argument("--target-steps", type=int, default=None,
                     help="ConvergenceModel local steps to target "
                          "(default 512, quick: 64)")
@@ -118,6 +123,23 @@ def main(argv=None):
     topk = args.topk if args.topk is not None \
         else (2 if args.quick else 4)
     shape = ShapeConfig("tune", "train", args.seq, args.batch)
+
+    seeded = None
+    if args.seed_wire:
+        from ..comm.select import AdaptiveWireSelector
+        from ..tune.space import engine_for
+        # representative engine: the grid's first candidate (deepest
+        # hierarchy comes first in TOPOLOGIES, so the seeded map covers
+        # the most boundaries; shallower grids truncate it)
+        cand0 = next(iter(space.enumerate()), None)
+        if cand0 is None:
+            raise SystemExit("empty candidate space")
+        sel = AdaptiveWireSelector().select(engine_for(cand0, shape))
+        space = dataclasses.replace(space,
+                                    seed_wire_map=tuple(sel.spec_map))
+        seeded = sel.summary()
+        print(f"[tune] seeded stage-1 wire grid from selector map "
+              f"{list(sel.spec_map)} (priors: {sel.priors_source})")
 
     print(f"[tune] stage 1: pricing {space.size()} candidates "
           f"({space.arch}{' smoke' if space.smoke else ''}, "
@@ -194,12 +216,15 @@ def main(argv=None):
                     "local_steps": list(space.local_steps),
                     "codecs": list(space.codecs),
                     "reconfig_rounds": list(space.reconfig_rounds),
+                    "seed_wire_map": list(space.seed_wire_map)
+                    if space.seed_wire_map else None,
                     "size": space.size()},
         fabric=fabric.name, stage1=ests, winners=winners,
         measured=[c.to_row() for c in result.cells] if result else None,
         steady_compiles=result.steady_compiles if result else None,
         priors=dataclasses.asdict(priors) if priors else None,
-        reselected=selection.summary() if selection else None)
+        reselected=selection.summary() if selection else None,
+        seeded=seeded)
     art._write_json(args.bench_out, bench)
     print(f"[tune] wrote {args.bench_out}")
     if result is not None and result.steady_compiles:

@@ -48,13 +48,25 @@ def shrink_config(cfg: ArchConfig, plan, budgets: dict,
     partial mapping would build a model whose shapes disagree with the
     fully-compacted state) or fall back to the legacy serve-time width
     shrink (``strict=False``): the first ``ffn*`` rule's budget becomes
-    the shared ``d_ff``, other dims untouched."""
+    the shared ``d_ff``, other dims untouched.  The fallback refuses
+    rules stacked over more than one axis — a (layer, expert)-stacked
+    ``moe_ffn`` has no single global ``d_ff`` to shrink."""
     m = _family_module(cfg.family)
     if hasattr(m, "shrink_config"):
         return m.shrink_config(cfg, plan, budgets)
     if not strict:
         ffn = next((r for r in plan.rules
                     if r.compactable and r.name.startswith("ffn")), None)
+        if ffn is not None and ffn.stack_ndims > 1:
+            # A multi-stacked ffn* rule (e.g. a per-(layer, expert)
+            # "moe_ffn") carries per-instance budgets — collapsing it
+            # onto the one global d_ff would silently build a model whose
+            # shapes disagree with the compacted state.
+            raise ValueError(
+                f"rule {ffn.name!r} is stacked over {ffn.stack_ndims} "
+                f"axes (per-(layer, expert) groups); the legacy "
+                f"strict=False d_ff shortcut cannot express it — the "
+                f"family module must define shrink_config")
         return cfg.replace(d_ff=int(budgets[ffn.name])) \
             if ffn is not None else cfg
     raise NotImplementedError(

@@ -9,7 +9,14 @@ MoE composes with the ADMM worker layout with zero extra collectives.
 
 Sparsity target ``moe_ffn`` prunes per-expert hidden units: groups live per
 (layer, expert) — stack_ndims=2 (DESIGN.md §5).  Shared experts are pruned
-via the dense ``ffn`` rule.
+via the dense ``ffn`` rule.  Sparsity target ``experts`` prunes WHOLE
+routed experts: the (layer, expert)-stacked FFN weights vote per expert,
+and the matching ``router`` logit column rides along as an unscored
+follower — a pruned expert's column is zeroed (masked phase) or sliced
+out (reconfigured phase), so the softmax renormalizes over surviving
+experts only and both phases route identically.  Shared experts are
+exempt: they process every token unconditionally, so there is no routing
+decision to prune — their capacity is governed by the ``ffn`` width rule.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..core.sparsity import GroupRule, LeafAxis, SparsityPlan, keep_count
+from ..core.sparsity import SparsityPlan, keep_count
 from .api import ModelBundle, pad_to
 from . import layers as L
 from . import transformer as TF
@@ -43,8 +50,7 @@ def init_moe_ffn(cfg: ArchConfig, key):
         "we_d": L.dense_init(ks[3], (E, fe, d), fe, _dt(cfg)),
     }
     if cfg.n_shared_experts:
-        fs = cfg.n_shared_experts * cfg.d_expert_eff
-        p["shared"] = L.init_swiglu(ks[4], d, fs, _dt(cfg))
+        p["shared"] = L.init_swiglu(ks[4], d, cfg.d_shared_eff, _dt(cfg))
     return p
 
 
@@ -84,11 +90,24 @@ def moe_ffn(cfg: ArchConfig, p, x, capacity_factor: float = 1.25):
     xf = x.reshape(N, d)
     logits = jnp.einsum("nd,de->ne", xf, p["router"],
                         preferred_element_type=jnp.float32)
+    # Expert-pruning renormalization: a pruned expert's router column is
+    # exactly zero (masked phase) or absent (reconfigured phase).  Forcing
+    # zero columns to -inf makes the masked softmax renormalize over the
+    # surviving experts — the same distribution the physically-compacted
+    # router produces — and blocks their gradient so pruned columns stay
+    # zero.  No expert pruned -> no all-zero column -> identity.
+    dead = jnp.all(p["router"] == 0, axis=0)                  # (E,)
+    logits = jnp.where(dead[None, :], -jnp.inf, logits)
     probs = jax.nn.softmax(logits, axis=-1)
     topv, topi = jax.lax.top_k(probs, k)                      # (N, k)
     topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
 
-    cap = int(math.ceil(N * k / E * capacity_factor / 8)) * 8
+    # Capacity is derived from ``moe_capacity_base`` (the parent's FULL
+    # expert count after a physical reconfiguration), not the live E, so
+    # per-expert capacity and drop behaviour match the full-shape masked
+    # model exactly.
+    cap = int(math.ceil(
+        N * k / cfg.moe_capacity_base * capacity_factor / 8)) * 8
     cap = min(cap, N)
     e_flat = topi.reshape(-1)                                  # (N*k,)
     order = jnp.argsort(e_flat, stable=True)
@@ -120,9 +139,13 @@ def moe_ffn(cfg: ArchConfig, p, x, capacity_factor: float = 1.25):
     if "shared" in p:
         out = out + L.swiglu(p["shared"], x).reshape(N, d)
 
-    # Switch-style load-balance aux loss
+    # Switch-style load-balance aux loss.  The scale factor is the LIVE
+    # expert count (E minus all-zero router columns): dead experts draw
+    # zero probability and zero assignments, so the masked-full and
+    # physically-compacted models compute the same aux value.
+    live = (E - jnp.sum(dead)).astype(jnp.float32)
     assign = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), 0)
-    aux = E * jnp.sum(assign * jnp.mean(probs, axis=0))
+    aux = live * jnp.sum(assign * jnp.mean(probs, axis=0))
     return out.reshape(B, T, d), aux
 
 
@@ -221,37 +244,96 @@ def param_specs(cfg: ArchConfig):
 
 
 def sparsity_plan(cfg: ArchConfig) -> SparsityPlan:
+    """Derived through the cross-layer :class:`core.coupling.CouplingGraph`
+    like the transformer/CNN families.  ``moe_ffn`` (per-expert hidden
+    units, stacked per (layer, expert)) is declared BEFORE ``experts``
+    (whole routed experts, stacked per layer): the expert rule compacts
+    the (layer, expert) STACK axis the moe_ffn rule's masks live on, and
+    ``compact_params`` applies rules in plan order — the ordering contract
+    ``coupling.validate_compaction_order`` enforces."""
+    from ..core.coupling import CouplingGraph
     hp = cfg.hsadmm
     fe = cfg.d_expert_eff
-    rules = []
+    g = CouplingGraph()
     if "moe_ffn" in cfg.prune_targets:
         keep = keep_count(fe, hp.keep_rate, MODEL_AXIS_SIZE)
-        rules.append(GroupRule(
-            "moe_ffn",
-            (LeafAxis("blocks/moe/we_g", 3), LeafAxis("blocks/moe/we_u", 3),
-             LeafAxis("blocks/moe/we_d", 2)),
-            groups=fe, keep=keep, stack_ndims=2, shards=MODEL_AXIS_SIZE))
+        co = g.producer("moe_ffn", "blocks/moe/we_g", 3, groups=fe,
+                        keep=keep, stack_ndims=2, shards=MODEL_AXIS_SIZE)
+        g.consumer(co, "blocks/moe/we_u", 3)      # tied gate/up producers
+        g.consumer(co, "blocks/moe/we_d", 2)      # down-proj C_in
     if "ffn" in cfg.prune_targets and cfg.n_shared_experts:
-        fs = cfg.n_shared_experts * fe
+        fs = cfg.d_shared_eff
         keep = keep_count(fs, hp.keep_rate, MODEL_AXIS_SIZE)
-        rules.append(GroupRule(
-            "ffn",
-            (LeafAxis("blocks/moe/shared/wg", 2),
-             LeafAxis("blocks/moe/shared/wu", 2),
-             LeafAxis("blocks/moe/shared/wd", 1)),
-            groups=fs, keep=keep, stack_ndims=1, shards=MODEL_AXIS_SIZE))
+        co = g.producer("ffn", "blocks/moe/shared/wg", 2, groups=fs,
+                        keep=keep, stack_ndims=1, shards=MODEL_AXIS_SIZE)
+        g.consumer(co, "blocks/moe/shared/wu", 2)
+        g.consumer(co, "blocks/moe/shared/wd", 1)
     if "heads" in cfg.prune_targets:
         keep = keep_count(cfg.n_kv_heads, hp.keep_rate, 2)
-        leaves = [LeafAxis("blocks/attn/wq", 2), LeafAxis("blocks/attn/wk", 2),
-                  LeafAxis("blocks/attn/wv", 2), LeafAxis("blocks/attn/wo", 1)]
+        h = g.producer("heads", "blocks/attn/wq", 2, groups=cfg.n_kv_heads,
+                       keep=keep, stack_ndims=1)
+        g.consumer(h, "blocks/attn/wk", 2)
+        g.consumer(h, "blocks/attn/wv", 2)
+        g.consumer(h, "blocks/attn/wo", 1)        # out-proj C_in
         if cfg.qkv_bias:
-            leaves += [LeafAxis("blocks/attn/bq", 1),
-                       LeafAxis("blocks/attn/bk", 1),
-                       LeafAxis("blocks/attn/bv", 1)]
-        rules.append(GroupRule("heads", tuple(leaves),
-                               groups=cfg.n_kv_heads, keep=keep,
-                               stack_ndims=1))
-    return SparsityPlan(tuple(rules))
+            g.consumer(h, "blocks/attn/bq", 1)
+            g.consumer(h, "blocks/attn/bk", 1)
+            g.consumer(h, "blocks/attn/bv", 1)
+    if "experts" in cfg.prune_targets:
+        keep = keep_count(cfg.n_experts, hp.keep_rate, 2)
+        if keep < cfg.moe_top_k:
+            raise ValueError(
+                f"expert keep budget {keep} < moe_top_k {cfg.moe_top_k} "
+                f"(n_experts={cfg.n_experts}, keep_rate={hp.keep_rate}): "
+                "routing needs top_k distinct surviving experts")
+        ex = g.producer("experts", "blocks/moe/we_g", 1,
+                        groups=cfg.n_experts, keep=keep, stack_ndims=1)
+        g.consumer(ex, "blocks/moe/we_u", 1)      # tied expert stacks
+        g.consumer(ex, "blocks/moe/we_d", 1)
+        # router logit column: masked/sliced with the expert, never votes —
+        # softmax renormalizes over the surviving columns (module docstring)
+        g.follower(ex, "blocks/moe/router", 2)
+    return g.plan()
+
+
+def shrink_config(cfg: ArchConfig, plan: SparsityPlan,
+                  budgets: dict) -> ArchConfig:
+    """ArchConfig of the physically-shrunk MoE architecture.
+
+    ``moe_ffn`` shrinks the per-expert hidden width ``d_expert``; ``ffn``
+    shrinks the SHARED-expert hidden width ``d_shared`` (decoupled from
+    ``d_expert`` precisely so the two budgets compose); ``experts``
+    shrinks ``n_experts`` to the expert budget while pinning
+    ``moe_capacity_experts`` to the parent's full expert count, so the
+    dispatch capacity (and drop behaviour) of the reconfigured model
+    matches the full-shape masked model.  Shared experts are exempt from
+    expert pruning — there is no routing decision to prune.  An expert
+    budget below ``moe_top_k`` cannot route and refuses loudly."""
+    new = cfg
+    for r in plan.rules:
+        if not r.compactable:
+            continue
+        B = int(budgets[r.name])
+        if r.name == "moe_ffn":
+            new = new.replace(d_expert=B)
+        elif r.name.startswith("ffn"):
+            new = new.replace(d_shared=B)
+        elif r.name == "experts":
+            if cfg.moe_top_k > B:
+                raise ValueError(
+                    f"expert budget {B} < moe_top_k {cfg.moe_top_k}: "
+                    "routing cannot pick top_k distinct experts from the "
+                    "surviving set; raise keep_rate or lower moe_top_k")
+            new = new.replace(n_experts=B,
+                              moe_capacity_experts=cfg.moe_capacity_base)
+        elif r.name == "heads":
+            g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+            new = new.replace(n_kv_heads=B, n_heads=B * g)
+        else:
+            raise NotImplementedError(
+                f"rule {r.name!r} has no width mapping for physical "
+                "reconfiguration of the MoE family")
+    return new
 
 
 def build(cfg: ArchConfig) -> ModelBundle:

@@ -33,6 +33,15 @@ with *recurrent* serving state (ssm/hybrid) are refused — pad tokens
 would enter the recurrent state and bucketing would silently change the
 math.
 
+Sampling is compiled INTO the decode executable: ``temperature=0``
+(default) bakes greedy argmax; ``temperature>0`` bakes temperature
+scaling, an optional top-p (nucleus) filter, and a categorical draw.
+The sampling executable takes one extra scalar int32 ``step`` operand —
+the scheduler's decode-dispatch counter — and derives every lane's key
+as ``fold_in(fold_in(PRNGKey(seed), step), lane)``, so draws are
+deterministic per (seed, step, lane), no RNG state lives host-side, and
+the steady state still performs zero compilations.
+
 On a RECONFIGURED / pruned bundle the caches come out at the shrunk
 widths automatically (``init_cache`` reads the bundle's own cfg), which
 is the serving half of the paper's Table 1 claim: less cache memory and
@@ -56,7 +65,16 @@ _RECURRENT_KEYS = ("ssm", "conv_x", "conv_B", "conv_C")
 
 class BucketEngine:
     def __init__(self, bundle: ModelBundle, spec: Optional[BucketSpec] = None,
-                 *, params_like=None, compile_now: bool = True):
+                 *, params_like=None, compile_now: bool = True,
+                 temperature: float = 0.0, top_p: float = 1.0,
+                 sample_seed: int = 0):
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+        self.temperature = float(temperature)
+        self.top_p = float(top_p)
+        self.sample_seed = int(sample_seed)
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.spec = spec or BucketSpec()
@@ -156,6 +174,37 @@ class BucketEngine:
                 lambda b, n: b.at[lanes].set(n, mode="drop"), bank, new)
         return prefill
 
+    @property
+    def samples(self) -> bool:
+        """True when the decode executable draws (temperature > 0) and so
+        takes the extra scalar ``step`` operand."""
+        return self.temperature > 0.0
+
+    def _sample_fn(self):
+        temperature, top_p = self.temperature, self.top_p
+        vocab = self.cfg.vocab
+
+        def sample(logits, key):
+            l = logits.astype(jnp.float32) / temperature
+            if l.shape[-1] > vocab:
+                # TP layouts pad the vocab axis; greedy argmax never picks
+                # a pad column (reference runs share the padding) but a
+                # categorical draw could — mask them out
+                ids = jnp.arange(l.shape[-1])
+                l = jnp.where(ids < vocab, l, -jnp.inf)
+            if top_p < 1.0:
+                srt = jnp.sort(l, axis=-1)[..., ::-1]        # descending
+                probs = jax.nn.softmax(srt, axis=-1)
+                cum = jnp.cumsum(probs, axis=-1)
+                # keep a token while the cumulative mass BEFORE it is
+                # < top_p (the top token is always kept)
+                kept = (cum - probs) < top_p
+                cutoff = jnp.min(jnp.where(kept, srt, jnp.inf),
+                                 axis=-1, keepdims=True)
+                l = jnp.where(l >= cutoff, l, -jnp.inf)
+            return jax.random.categorical(key, l).astype(jnp.int32)
+        return sample
+
     def _decode_fn(self):
         bundle = self.bundle
 
@@ -166,6 +215,23 @@ class BucketEngine:
         def decode(params, toks, bank):
             nxt, bank = jax.vmap(
                 lambda t, c: one(params, t, c))(toks, bank)
+            return nxt, bank
+        return decode
+
+    def _decode_sample_fn(self):
+        bundle, seed = self.bundle, self.sample_seed
+        sample = self._sample_fn()
+
+        def one(params, tok, cache, key):
+            logits, cache = bundle.decode(params, tok[None, None], cache)
+            return sample(logits[0], key), cache
+
+        def decode(params, toks, bank, step):
+            base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+            keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+                jnp.arange(toks.shape[0], dtype=jnp.int32))
+            nxt, bank = jax.vmap(
+                lambda t, c, k: one(params, t, c, k))(toks, bank, keys)
             return nxt, bank
         return decode
 
@@ -196,9 +262,15 @@ class BucketEngine:
             if sb in self._decode:
                 continue
             toks = jax.ShapeDtypeStruct((self.spec.lanes,), i32)
-            self._decode[sb] = jax.jit(
-                self._decode_fn(), donate_argnums=(2,)).lower(
-                self._pstruct, toks, self.bank_struct(sb)).compile()
+            if self.samples:
+                step = jax.ShapeDtypeStruct((), i32)
+                self._decode[sb] = jax.jit(
+                    self._decode_sample_fn(), donate_argnums=(2,)).lower(
+                    self._pstruct, toks, self.bank_struct(sb), step).compile()
+            else:
+                self._decode[sb] = jax.jit(
+                    self._decode_fn(), donate_argnums=(2,)).lower(
+                    self._pstruct, toks, self.bank_struct(sb)).compile()
         for (nb, pb, sb) in self.spec.prefill_keys():
             if (nb, pb, sb) in self._prefill:
                 continue
@@ -226,7 +298,9 @@ class BucketEngine:
     def decode_exec(self, sb: int):
         """(params, toks (lanes,), bank) -> (next_tokens (lanes,), bank).
         One dispatch advances EVERY active lane of the bank by one token;
-        ``bank`` is donated."""
+        ``bank`` is donated.  When :attr:`samples` the executable takes a
+        trailing scalar int32 ``step`` operand (the scheduler's decode
+        dispatch counter) that seeds the per-lane draws."""
         return self._decode[sb]
 
     def classify_exec(self, nb: int):

@@ -202,8 +202,16 @@ class ContinuousScheduler:
             for lane, st in enumerate(bank.lanes):
                 if st is not None:
                     toks[lane] = st.next_tok
-            nxt, bank.cache = self.engine.decode_exec(sb)(
-                self.params, toks, bank.cache)
+            if getattr(self.engine, "samples", False):
+                # sampling executables take the dispatch counter as their
+                # RNG step, so draws are deterministic per (seed, step,
+                # lane) with no host-side RNG state
+                nxt, bank.cache = self.engine.decode_exec(sb)(
+                    self.params, toks, bank.cache,
+                    np.int32(self.dispatches["decode"]))
+            else:
+                nxt, bank.cache = self.engine.decode_exec(sb)(
+                    self.params, toks, bank.cache)
             self.dispatches["decode"] += 1
             nxt = np.asarray(nxt)
             for lane, st in enumerate(bank.lanes):

@@ -261,6 +261,14 @@ class Engine:
 
         wire_compact = self._boundary_compact_flags()
         plan = spec.plan
+        # identity-mask stack shapes come from the NEW architecture's leaf
+        # shapes, not the old mask state: a rule that compacts another
+        # rule's STACK axis (MoE "experts" slicing the (layer, expert)
+        # stack "moe_ffn" masks live on) shrinks that stack extent too.
+        p2 = jax.eval_shape(bundle2.init, jax.random.PRNGKey(0))
+        shapes2 = {k: tuple(v.shape) for k, v in flatten(p2).items()}
+        new_stacks = {r2.name: shapes2[r2.leaves[0].key][:r2.stack_ndims]
+                      for r2 in new_plan.rules}
 
         def migrate(st):
             idxs = {r.name: st["masks"][r.name]["idx"] for r in plan.rules}
@@ -270,7 +278,7 @@ class Engine:
                 r1 = plan.rule(r2.name)
                 if r1.compactable:
                     new_masks[r2.name] = identity_mask_state(
-                        r2, old["mask"].shape[:-1], budgets[r2.name])
+                        r2, new_stacks[r2.name], budgets[r2.name])
                 elif any(compacting_rule(plan, la.key, a) is not None
                          for la in r1.all_leaves for a in la.axes):
                     # projection-only composite rule riding a compacted

@@ -139,6 +139,7 @@ def bench_payload(*, space_json: dict, fabric: str, stage1: list,
                   steady_compiles: Optional[int] = None,
                   priors: Optional[dict] = None,
                   reselected: Optional[dict] = None,
+                  seeded: Optional[dict] = None,
                   top_rows: int = 12) -> dict:
     """The ``BENCH_tune.json`` perf-trajectory artifact."""
     return {
@@ -154,4 +155,6 @@ def bench_payload(*, space_json: dict, fabric: str, stage1: list,
         },
         "priors": priors,            # fitted SelectorPriors (or analytic)
         "reselected_wire_map": reselected,
+        # the selector map that seeded stage 1 (--seed-wire), or None
+        "seeded_wire_map": seeded,
     }

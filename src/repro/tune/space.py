@@ -108,6 +108,27 @@ class TuneSpace:
     codecs: tuple = ("dense", "compact+q8", "compact+q4")
     reconfig_rounds: tuple = (None, 12)
     intra: str = INTRA_DEFAULT
+    #: optional per-boundary spec map from a measured
+    #: :class:`repro.comm.select.AdaptiveWireSelector` run (``--seed-wire``):
+    #: intra boundaries take the seeded specs instead of ``intra``, and the
+    #: seeded TOP spec joins the ``codecs`` sweep when not already listed.
+    #: None (the default) leaves the grid exactly as configured.
+    seed_wire_map: Optional[tuple] = None
+
+    def _codec_grid(self) -> tuple:
+        if self.seed_wire_map and self.seed_wire_map[-1] not in self.codecs:
+            return self.codecs + (self.seed_wire_map[-1],)
+        return self.codecs
+
+    def _intra_specs(self, K: int) -> tuple:
+        """Specs for the K-1 intra boundaries: the seeded map's inner
+        entries when seeded (padded with ``intra`` for deeper grids),
+        else ``intra`` everywhere."""
+        if not self.seed_wire_map:
+            return (self.intra,) * (K - 1)
+        inner = tuple(self.seed_wire_map[:-1])
+        inner = inner + (self.intra,) * max(0, K - 1 - len(inner))
+        return inner[:K - 1]
 
     def enumerate(self) -> Iterator[Candidate]:
         for topo in self.topologies:
@@ -115,8 +136,8 @@ class TuneSpace:
                 K = num_boundaries(topo, W, self.node_size)
                 for keep in self.keeps:
                     for E in self.local_steps:
-                        for codec in self.codecs:
-                            wm = (self.intra,) * (K - 1) + (codec,)
+                        for codec in self._codec_grid():
+                            wm = self._intra_specs(K) + (codec,)
                             for r in self.reconfig_rounds:
                                 yield Candidate(
                                     arch=self.arch, smoke=self.smoke,

@@ -338,6 +338,107 @@ def test_shape_rule_composes_through_state_roundtrip():
                                   np.asarray(m_s))
 
 
+# ---------------------------------------------------------------------------
+# S_expert ∩ S_f ∩ S_c: the expert-stack axis compacted UNDER stacked
+# per-(layer, expert) rules on the same leaf (the family="moe" composition)
+# ---------------------------------------------------------------------------
+
+
+def test_expert_stack_compaction_composes_with_ffn_and_channel():
+    """Three rules on one expert-stacked leaf: per-(layer, expert) filter
+    (S_f) and channel (S_c) budgets, plus a whole-expert rule (S_expert)
+    that compacts the very axis the other two are stacked over — with an
+    unscored router follower losing the SAME logit columns.  The
+    compact/expand roundtrip equals the triple projection exactly, and a
+    plan ordering that would compact the stack axis BEFORE the stacked
+    rules run is refused by validate_compaction_order."""
+    L, Ex, Cin, Cout, D = 2, 8, 6, 12, 5
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (L, Ex, Cin, Cout))
+    router = jax.random.normal(jax.random.fold_in(key, 1), (L, D, Ex))
+    params = {"w": w, "router": router}
+    plan = SparsityPlan((
+        GroupRule("moe_ffn", (LeafAxis("w", 3),), groups=Cout, keep=6,
+                  stack_ndims=2),
+        GroupRule("cin", (LeafAxis("w", 2),), groups=Cin, keep=4,
+                  stack_ndims=2),
+        GroupRule("experts", (LeafAxis("w", 1),), groups=Ex, keep=4,
+                  stack_ndims=1,
+                  followers=(LeafAxis("router", 2),)),
+    ))
+
+    rng = np.random.default_rng(0)
+
+    def stack_idx(stack, n, keep):
+        flat = [np.sort(rng.choice(n, keep, replace=False))
+                for _ in range(int(np.prod(stack)))]
+        return jnp.asarray(np.stack(flat).reshape(*stack, keep), jnp.int32)
+
+    idxs = {"moe_ffn": stack_idx((L, Ex), Cout, 6),
+            "cin": stack_idx((L, Ex), Cin, 4),
+            "experts": stack_idx((L,), Ex, 4)}
+
+    def stack_mask(idx, n):
+        m = np.zeros(idx.shape[:-1] + (n,), np.float32)
+        np.put_along_axis(m, np.asarray(idx), 1.0, axis=-1)
+        return m
+
+    m_f = stack_mask(idxs["moe_ffn"], Cout)        # (L, Ex, Cout)
+    m_c = stack_mask(idxs["cin"], Cin)             # (L, Ex, Cin)
+    m_e = stack_mask(idxs["experts"], Ex)          # (L, Ex)
+
+    c = compact_params(dict(params), plan, idxs)
+    assert c["w"].shape == (L, 4, 4, 6)
+    assert c["router"].shape == (L, D, 4)
+    # surviving experts carry their OWN per-expert kept sets: expert
+    # e' = idx_e[l, j] of layer l lands at stack slot j with its rows
+    # m_c[l, e'] / cols m_f[l, e'] selected
+    idx_e = np.asarray(idxs["experts"])
+    for l in range(L):
+        for j, e in enumerate(idx_e[l]):
+            want = np.asarray(w)[l, e][
+                np.ix_(np.flatnonzero(m_c[l, e]),
+                       np.flatnonzero(m_f[l, e]))]
+            np.testing.assert_array_equal(np.asarray(c["w"])[l, j], want)
+            np.testing.assert_array_equal(np.asarray(c["router"])[l, :, j],
+                                          np.asarray(router)[l, :, e])
+
+    fulls = {r.name: r.groups for r in plan.rules}
+    e = expand_params(c, plan, idxs, fulls)
+    proj_w = np.asarray(w) * m_f[:, :, None, :] * m_c[:, :, :, None] \
+        * m_e[:, :, None, None]
+    proj_r = np.asarray(router) * m_e[:, None, :]
+    np.testing.assert_allclose(np.asarray(e["w"]), proj_w, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e["router"]), proj_r, rtol=1e-6)
+
+    # ordering contract: experts compacts the stack axis of moe_ffn/cin,
+    # so it must come LAST — the reversed plan is refused, not silently
+    # mis-gathered
+    bad = SparsityPlan((plan.rules[2], plan.rules[0], plan.rules[1]))
+    with pytest.raises(ValueError, match="precede"):
+        compact_params(dict(params), bad, idxs)
+    with pytest.raises(ValueError, match="precede"):
+        expand_params(c, bad, idxs, fulls)
+
+
+def test_moe_plan_rederives_through_graph():
+    """The moe family's plan comes out of the coupling graph with the
+    declaration order the compaction contract requires: every stacked
+    (layer, expert) rule precedes the expert rule that compacts their
+    stack axis, and the router rides as an unscored follower."""
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True)
+    plan = build(cfg).plan
+    names = [r.name for r in plan.rules]
+    assert names.index("moe_ffn") < names.index("experts")
+    ex = plan.rule("experts")
+    assert ex.stack_ndims == 1 and ex.groups == cfg.n_experts
+    assert LeafAxis("blocks/moe/router", 2) in ex.followers
+    # shared experts are exempt: the "ffn" class never touches the
+    # expert-stacked leaves
+    ffn = plan.rule("ffn")
+    assert all("moe/shared" in la.key for la in ffn.leaves)
+
+
 def test_shrunk_plan_requires_shapes_for_overlap():
     plan = _sfc_plan()
     budgets = {"f": 12, "c": 8, "s": 72}

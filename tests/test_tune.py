@@ -72,6 +72,32 @@ def test_sweep_ranking_deterministic():
             assert e.time_s < twin.time_s
 
 
+def test_seeded_wire_map_reshapes_grid_opt_in():
+    """--seed-wire seeding: intra boundaries take the selector's specs,
+    the seeded top codec joins the sweep only when missing, and an
+    UNSEEDED space (the default) is bit-identical to before."""
+    assert FIXED_SPACE.size() == 8          # seeding is strictly opt-in
+    seeded = dataclasses.replace(
+        FIXED_SPACE, seed_wire_map=("compact+q8", "q4"))
+    cands = list(seeded.enumerate())
+    # chip W=4 has K=2 boundaries: intra boundary takes the seeded spec
+    assert all(c.wire_map[0] == "compact+q8" for c in cands)
+    # "q4" was not in codecs -> it joins the top-boundary sweep
+    assert {c.wire_map[-1] for c in cands} \
+        == {"dense", "compact+q8", "q4"}
+    assert seeded.size() == 12              # 3 codecs x 2 E x 2 reconfig
+    # a seeded top spec already in codecs does NOT duplicate
+    same = dataclasses.replace(
+        FIXED_SPACE, seed_wire_map=("q8", "compact+q8"))
+    assert same.size() == 8
+    assert all(c.wire_map[0] == "q8" for c in same.enumerate())
+    # bench payload records the seeded map under its own key
+    bench = art.bench_payload(
+        space_json={}, fabric="tpu_v5e", stage1=[], winners={},
+        seeded={"wire_map": ["compact+q8", "q4"]})
+    assert bench["seeded_wire_map"] == {"wire_map": ["compact+q8", "q4"]}
+
+
 def test_reconfig_phase_split():
     table = _fixed_table(t_freeze=4)
     conv = ConvergenceModel(128)
